@@ -1,0 +1,25 @@
+"""Framework-level DSE validation (beyond-paper): Algorithm-1 models
+predicting compiled roofline inputs from analytic features, leave-one-out
+validated over the dry-run corpus."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.model_dse import fit_dse, load_corpus
+
+
+def run(results_dir: str = "results", tag: str = "baseline"):
+    rows = load_corpus(results_dir, tag)
+    if len(rows) < 8:
+        emit("model_dse/skipped", 0.0, f"corpus={len(rows)}-cells")
+        return
+    dse = fit_dse(rows)
+    for tgt, met in dse.loo.items():
+        emit(f"model_dse/{tgt}", 0.0,
+             f"cells={len(rows)};loo_r2={met['r2']:.4f};"
+             f"loo_mape_pct={met['mape_pct']:.1f};"
+             f"loo_log10_mae={met['log_mae']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Roofline table: three terms per (arch × shape × mesh) cell from the
+dry-run corpus (results/*.json) — see EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.core.model_dse import load_corpus
+from repro.core.roofline import roofline_terms
+
+
+def run(results_dir: str = "results", tag: str = "baseline"):
+    rows = load_corpus(results_dir, tag)
+    if not rows:
+        emit(f"roofline/{tag}", 0.0, "no-results-yet")
+        return
+    for r in rows:
+        t = roofline_terms(r)
+        emit(f"roofline/{tag}/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+             f"compute_s={t['compute_s']:.4g};memory_s={t['memory_s']:.4g};"
+             f"collective_s={t['collective_s']:.4g};"
+             f"dominant={t['dominant'].removesuffix('_s')};"
+             f"roofline_frac={t['roofline_fraction']:.4f};"
+             f"useful_flops_ratio={t['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,20 @@
+"""Benchmark driver — one section per paper table plus the roofline and
+framework-DSE tables.  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (model_dse_bench, roofline_bench, table2_blocks,
+                            table3_corr, table4_models, table5_alloc)
+    print("name,us_per_call,derived")
+    table2_blocks.run()
+    table3_corr.run()
+    table4_models.run()
+    table5_alloc.run()
+    roofline_bench.run()
+    model_dse_bench.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table 3: Pearson correlations between (data_bits, coeff_bits) and
+each resource class, per block."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import correlate, synth
+
+
+def run(verbose: bool = True):
+    rows = synth.run_sweep()
+    for block in ("conv1", "conv2", "conv3", "conv4"):
+        table = correlate.correlation_table(rows, block)
+        for res, entry in table.items():
+            emit(f"table3/{block}/{synth.fpga_name(res)}", 0.0,
+                 f"corr_data={entry['data_bits']:.3f};"
+                 f"corr_coeff={entry['coeff_bits']:.3f};"
+                 f"family={correlate.choose_model_family(entry)}")
+
+
+if __name__ == "__main__":
+    run()

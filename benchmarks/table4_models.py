@@ -1,0 +1,36 @@
+"""Paper Table 4 (+ Figures 1-3 data): Algorithm-1 polynomial models per
+block with EQM/EAM/R²/EAMP error metrics; prints the fitted formulas for
+the paper's headline LLUT models."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import polyfit, synth
+
+
+def run():
+    rows = synth.run_sweep()
+    for block in ("conv1", "conv2", "conv3", "conv4"):
+        d, c, ys = synth.sweep_arrays(rows, block)
+        for res in synth.RESOURCES:
+            y = ys[res]
+            if np.std(y) < 1e-12:
+                continue
+            m = polyfit.fit_auto(d, c, y, block=block)
+            met = polyfit.error_metrics(y, m.predict(d, c))
+            kind = (f"seg[{m.scheme}]" if isinstance(m, polyfit.SegmentedModel)
+                    else f"poly(deg{m.degree})")
+            emit(f"table4/{block}/{synth.fpga_name(res)}", 0.0,
+                 f"model={kind};mse={met['mse']:.4g};mae={met['mae']:.4g};"
+                 f"r2={met['r2']:.4f};mape_pct={met['mape_pct']:.3f}")
+        # headline formula (paper prints the Conv4 LLUT polynomial)
+        m_llut = polyfit.fit_auto(d, c, ys["vpu_ops"], block=block)
+        if isinstance(m_llut, polyfit.PolyModel):
+            emit(f"table4/{block}/LLUT_formula", 0.0,
+                 m_llut.formula("LLUT").replace(",", ";"))
+
+
+if __name__ == "__main__":
+    run()

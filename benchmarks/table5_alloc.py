@@ -1,0 +1,31 @@
+"""Paper Table 5: predicted resource utilization for block allocations at
+8-bit precision — the mixed 80%-target allocation plus single-block rows."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import allocate, synth
+
+
+def run():
+    rows = synth.run_sweep()
+    bm = allocate.BlockModels.fit(rows)
+
+    mix = allocate.allocate(bm, data_bits=8, coeff_bits=8, target=0.8)
+    counts = ";".join(f"{b}={n}" for b, n in mix.counts.items())
+    usage = ";".join(f"{r}={u:.1f}%" for r, u in mix.usage_pct.items())
+    emit("table5/mixed_80pct", 0.0,
+         f"{counts};total_convs={mix.total_convs:.0f};{usage}")
+
+    for block in ("conv1", "conv2", "conv3", "conv4"):
+        single = allocate.allocate(bm, data_bits=8, coeff_bits=8,
+                                   target=0.8, only_block=block)
+        usage = ";".join(f"{r}={u:.1f}%"
+                         for r, u in single.usage_pct.items())
+        emit(f"table5/only_{block}", 0.0,
+             f"n={single.counts[block]};"
+             f"total_convs={single.total_convs:.0f};{usage}")
+
+
+if __name__ == "__main__":
+    run()

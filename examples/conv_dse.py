@@ -1,0 +1,55 @@
+"""The paper, end-to-end: parameterizable convolution blocks → "synthesis"
+sweep → Pearson correlation → Algorithm-1 polynomial models → error
+metrics → 80%-utilization block allocation (Tables 2-5).
+
+    PYTHONPATH=src python examples/conv_dse.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import allocate, correlate, polyfit, synth
+
+
+def main():
+    print("== §3.2 synthesis sweep (4 blocks × 14×14 bit configs) ==")
+    rows = synth.run_sweep()
+    print(f"   {len(rows)} configurations (cached)")
+
+    print("\n== §3.3 Pearson correlation (Table 3) ==")
+    for block in ("conv1", "conv2", "conv3", "conv4"):
+        t = correlate.correlation_table(rows, block)
+        e = t["vpu_ops"]
+        fam = correlate.choose_model_family(e)
+        print(f"   {block}: LLUT~data={e['data_bits']:+.3f} "
+              f"LLUT~coeff={e['coeff_bits']:+.3f} → {fam}")
+
+    print("\n== §3.4 Algorithm 1 models + §4.1 errors (Table 4) ==")
+    for block in ("conv1", "conv2", "conv3", "conv4"):
+        d, c, ys = synth.sweep_arrays(rows, block)
+        m = polyfit.fit_auto(d, c, ys["vpu_ops"], block=block)
+        met = polyfit.error_metrics(ys["vpu_ops"], m.predict(d, c))
+        kind = (f"segmented[{m.scheme}]"
+                if isinstance(m, polyfit.SegmentedModel)
+                else m.formula("LLUT"))
+        print(f"   {block}: R²={met['r2']:.4f} MAPE={met['mape_pct']:.2f}%")
+        print(f"      {kind}")
+
+    print("\n== §4.2 allocation at 80% budget, 8-bit (Table 5) ==")
+    bm = allocate.BlockModels.fit(rows)
+    mix = allocate.allocate(bm, data_bits=8, coeff_bits=8, target=0.8)
+    print(f"   mixed: {mix.counts}  → {mix.total_convs:.0f} convs/step")
+    print(f"   usage: " + ", ".join(f"{k}={v:.1f}%"
+                                    for k, v in mix.usage_pct.items()))
+    for b in ("conv1", "conv2", "conv3", "conv4"):
+        s = allocate.allocate(bm, data_bits=8, coeff_bits=8, target=0.8,
+                              only_block=b)
+        print(f"   only {b}: n={s.counts[b]} "
+              f"→ {s.total_convs:.0f} convs/step")
+
+
+if __name__ == "__main__":
+    main()

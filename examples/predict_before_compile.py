@@ -1,0 +1,39 @@
+"""Compile-free design-space exploration (the paper's contribution at
+framework scale): predict a cell's roofline inputs from analytic features
+using models fitted on the dry-run corpus — no 512-device compile needed.
+
+    PYTHONPATH=src python examples/predict_before_compile.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.model_dse import fit_dse, load_corpus
+from repro.core.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def main():
+    rows = load_corpus("results", "baseline")
+    if len(rows) < 8:
+        print("run the dry-run sweep first: "
+              "python -m repro.launch.dryrun --all --mesh both")
+        return
+    dse = fit_dse(rows)
+    print("LOO validation over", len(rows), "cells:")
+    for tgt, met in dse.loo.items():
+        print(f"  {tgt}: R²={met['r2']:.3f} log10-MAE={met['log_mae']:.3f}")
+
+    print("\npredicting cells without compiling:")
+    for arch, shape in [("qwen3-moe-30b-a3b", "train_4k"),
+                        ("granite-20b", "prefill_32k"),
+                        ("mamba2-1.3b", "decode_32k")]:
+        p = dse.predict(arch, shape, n_chips=256)
+        print(f"  {arch} × {shape}: "
+              f"compute≈{p['flops']/PEAK_FLOPS:.3g}s "
+              f"memory≈{p['hbm_bytes']/HBM_BW:.3g}s "
+              f"collective≈{p['collective_total']/ICI_BW:.3g}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Generate the EXPERIMENTS.md §Roofline markdown table from results/."""
+
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.roofline import roofline_terms  # noqa: E402
+
+
+def fmt(v):
+    if v == 0:
+        return "0"
+    if v < 0.001 or v >= 10000:
+        return f"{v:.2e}"
+    return f"{v:.3f}"
+
+
+def main(tag="baseline", mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(f"results/{tag}__*__{mesh}.json")):
+        r = json.load(open(f))
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], None, r["reason"]))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], None,
+                         "ERROR " + r.get("error", "?")[:60]))
+            continue
+        t = roofline_terms(r)
+        rows.append((r["arch"], r["shape"], t, r))
+    print("| arch | shape | compute s | memory s | coll s | dominant | "
+          "MODEL_FLOPS | useful ratio | roofline frac | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, t, extra in rows:
+        if t is None:
+            print(f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                  f"skipped: {extra[:70]} |")
+            continue
+        r = extra
+        mem_gib = r["memory"].get("argument_size_in_bytes", 0) / 2**30
+        tmp_gib = r["memory"].get("temp_size_in_bytes", 0) / 2**30
+        note = (f"args {mem_gib:.1f}+tmp {tmp_gib:.1f} GiB/dev, "
+                f"{r['mode']}")
+        print(f"| {arch} | {shape} | {fmt(t['compute_s'])} | "
+              f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+              f"{t['dominant'].removesuffix('_s')} | "
+              f"{t['model_flops']:.2e} | {t['useful_flops_ratio']:.3f} | "
+              f"{t['roofline_fraction']:.4f} | {note} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

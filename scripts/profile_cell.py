@@ -1,0 +1,57 @@
+"""Dry-run profiler: top FLOPs / HBM-traffic / collective contributors of a
+saved cell HLO (results/<tag>__<cell>.hlo.gz) — the §Perf 'profile'."""
+
+import gzip
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import hloscan  # noqa: E402
+
+
+def profile(path, topn=12):
+    text = gzip.open(path, "rt").read()
+    mod = hloscan.HloModule(text)
+    flops, traffic, colls = {}, {}, {}
+
+    def walk(comp, mult):
+        for name, type_str, op, rest in mod.computations.get(comp, []):
+            meta = re.search(r'op_name="([^"]+)"', rest)
+            tag = meta.group(1).split("/")[-2:] if meta else [op]
+            tag = "/".join(tag)[:70]
+            if op in ("dot", "convolution"):
+                flops[tag] = flops.get(tag, 0) + \
+                    mod._dot_flops(type_str, rest) * mult
+            if op in hloscan._COLLECTIVES:
+                b = hloscan._shape_bytes(type_str) * \
+                    hloscan._COLLECTIVE_FACTOR[op]
+                colls[f"{op}:{tag}"] = colls.get(f"{op}:{tag}", 0) + b * mult
+            if op in hloscan._MACRO_TRAFFIC_OPS:
+                t = mod._macro_traffic(name, type_str, op, rest) * mult
+                key = re.sub(r"[.\d]+$", "", name)
+                traffic[key] = traffic.get(key, 0) + t
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", rest)
+                tm = hloscan._TRIP_CFG.search(rest)
+                trip = int(tm.group(1)) if tm else 1
+                if bm:
+                    walk(bm.group(1), mult * trip)
+            elif op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", rest)
+                if cm:
+                    walk(cm.group(1), mult)
+
+    walk(mod.entry, 1.0)
+    for title, d, unit in (("FLOPS", flops, 1e12),
+                           ("HBM TRAFFIC", traffic, 2**30),
+                           ("COLLECTIVES", colls, 2**30)):
+        total = sum(d.values())
+        print(f"\n== {title}: total {total/unit:.2f} "
+              f"{'T' if unit == 1e12 else 'GiB'} ==")
+        for k, v in sorted(d.items(), key=lambda kv: -kv[1])[:topn]:
+            print(f"  {v/unit:10.2f} ({v/total*100:5.1f}%)  {k}")
+
+
+if __name__ == "__main__":
+    profile(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 12)

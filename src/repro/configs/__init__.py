@@ -1,0 +1,10 @@
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig,
+                                ShapeConfig, SubLayer, SHAPES,
+                                cell_is_runnable, get_config, list_archs,
+                                register, smoke_config)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SubLayer",
+    "SHAPES", "cell_is_runnable", "get_config", "list_archs", "register",
+    "smoke_config",
+]

@@ -1,0 +1,25 @@
+"""The paper's own workload: a library of parameterizable 3x3 convolution
+blocks swept over data/coefficient bit widths (3..16), per §3.2 of the paper.
+
+This is not an LM arch; it configures the block-level resource sweep
+(core/synth.py) that reproduces Tables 3-5.
+"""
+
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ConvSweepConfig:
+    name: str = "paper-conv-sweep"
+    blocks: Tuple[str, ...] = ("conv1", "conv2", "conv3", "conv4")
+    data_bits: Tuple[int, ...] = tuple(range(3, 17))
+    coeff_bits: Tuple[int, ...] = tuple(range(3, 17))
+    # image tile the blocks stream over (one output tile per grid step)
+    tile_h: int = 16
+    tile_w: int = 128
+    channels: int = 8              # input channel depth per block instance
+    kernel: int = 3
+
+
+SWEEP = ConvSweepConfig()

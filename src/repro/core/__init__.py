@@ -1,0 +1,6 @@
+# The paper's primary contribution: configurable convolution blocks +
+# resource-prediction models (synthesis-free design-space exploration),
+# adapted FPGA→TPU.  See DESIGN.md §2.
+from repro.core import hloscan
+
+__all__ = ["hloscan"]

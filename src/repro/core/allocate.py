@@ -1,0 +1,103 @@
+"""Block allocation under resource budgets (paper §4.2, Table 5).
+
+The paper packs a ZCU104 to a target utilization (80 %) with a mix of
+convolution blocks chosen purely from the fitted models.  TPU adaptation
+(DESIGN.md §7): FPGA area budgets become per-chip *rate* budgets — a block
+instance is a streaming pipeline consuming predicted resources per tile
+step (normalized to 1 tile/µs, the paper's one-conv-per-cycle unit):
+
+  DSP  → MXU issue (int32-equivalent FLOPs/µs)
+  LLUT → VPU lane-ops/µs
+  BRAM → HBM bytes/µs
+  VMEM → VMEM bytes (capacity, not rate)
+
+The allocation itself is the same optimization problem: maximize total
+convolutions subject to every resource ≤ target·budget, solved by LP
+relaxation (scipy linprog) + greedy integer rounding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+from scipy.optimize import linprog
+
+from repro.core import polyfit, synth
+
+# v5e per-chip budgets in the allocator's normalized units
+V5E_BUDGETS = {
+    "mxu_cost": 98.5e6,       # int32-equiv FLOPs/µs (197 TFLOP/s bf16 peak)
+    "vpu_ops": 3.0e6,         # int32 lane-ops/µs
+    "hbm_bytes": 819e3,       # bytes/µs (819 GB/s)
+    "vmem_bytes": 128 * 2**20,  # bytes (capacity)
+}
+
+
+@dataclass
+class BlockModels:
+    """Fitted per-resource models for every block (from the sweep)."""
+    models: Dict[str, Dict[str, object]]   # block -> resource -> model
+    convs: Dict[str, float]                # block -> convolutions per step
+
+    @classmethod
+    def fit(cls, rows: List[dict]) -> "BlockModels":
+        blocks = sorted({r["block"] for r in rows})
+        models, convs = {}, {}
+        for b in blocks:
+            d, c, ys = synth.sweep_arrays(rows, b)
+            models[b] = {res: polyfit.fit_auto(d, c, ys[res], block=b)
+                         for res in V5E_BUDGETS if np.std(ys[res]) > 0
+                         or True}
+            convs[b] = next(r["convs_per_step"] for r in rows
+                            if r["block"] == b)
+        return cls(models, convs)
+
+    def demand(self, block: str, data_bits: int, coeff_bits: int) -> Dict:
+        return {res: float(max(m.predict(data_bits, coeff_bits)[0], 0.0))
+                for res, m in self.models[block].items()}
+
+
+@dataclass
+class Allocation:
+    counts: Dict[str, int]
+    usage_pct: Dict[str, float]
+    total_convs: float
+
+
+def allocate(bm: BlockModels, *, data_bits: int = 8, coeff_bits: int = 8,
+             target: float = 0.8,
+             budgets: Optional[Dict[str, float]] = None,
+             only_block: Optional[str] = None) -> Allocation:
+    budgets = budgets or V5E_BUDGETS
+    blocks = [only_block] if only_block else sorted(bm.models)
+    res_names = sorted(budgets)
+    A = np.array([[bm.demand(b, data_bits, coeff_bits)[r] for b in blocks]
+                  for r in res_names])
+    ub = np.array([target * budgets[r] for r in res_names])
+    objective = -np.array([bm.convs[b] for b in blocks])
+
+    lp = linprog(objective, A_ub=A, b_ub=ub, bounds=[(0, None)] * len(blocks),
+                 method="highs")
+    n = np.floor(lp.x + 1e-9).astype(int) if lp.success else \
+        np.zeros(len(blocks), int)
+
+    # greedy top-up: add whichever block still fits and adds most convs
+    improved = True
+    while improved:
+        improved = False
+        order = sorted(range(len(blocks)),
+                       key=lambda i: -bm.convs[blocks[i]])
+        for i in order:
+            trial = n.copy()
+            trial[i] += 1
+            if np.all(A @ trial <= ub + 1e-9):
+                n = trial
+                improved = True
+    used = A @ n
+    usage = {r: float(100 * used[k] / budgets[r])
+             for k, r in enumerate(res_names)}
+    total = float(sum(bm.convs[b] * n[i] for i, b in enumerate(blocks)))
+    return Allocation({b: int(n[i]) for i, b in enumerate(blocks)},
+                      usage, total)

@@ -1,0 +1,142 @@
+"""Fixed-point CNN built on the paper's convolution-block library.
+
+This is the deployment story of the paper closed end-to-end: a small CNN
+whose every 3×3 layer is executed by one of the four parameterizable
+blocks, with the block TYPE chosen *by the fitted resource models* (the
+Table-5 allocator) under a per-platform budget — exactly the "model-driven
+block selection" workflow of §4.2.
+
+Numerics: power-of-two fixed-point. Activations and weights are quantized
+to (data_bits, coeff_bits); accumulation is exact int32; each layer
+rescales by a right-shift and clamps back into the activation range
+(ReLU folded into the clamp).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import allocate, synth
+from repro.kernels import conv2d
+from repro.kernels import ops
+
+
+@dataclass(frozen=True)
+class ConvLayerSpec:
+    in_channels: int
+    out_channels: int
+    data_bits: int = 8
+    coeff_bits: int = 8
+    shift: int = 7                 # post-accumulation right-shift
+    block: Optional[str] = None    # None → allocator decides
+
+
+@dataclass
+class CNNConfig:
+    layers: Tuple[ConvLayerSpec, ...]
+    img_h: int = 32
+    img_w: int = 128
+
+
+def choose_blocks(cfg: CNNConfig, rows=None,
+                  budgets=None) -> List[str]:
+    """Model-driven block selection (paper §4.2): for each layer pick the
+    block that maximizes convolutions/step-per-resource under the fitted
+    models — conv pairs go to dual-output blocks while the MXU budget
+    lasts, the rest to Conv1 (logic) / Conv2 (single-MXU)."""
+    rows = rows if rows is not None else synth.run_sweep()
+    bm = allocate.BlockModels.fit(rows)
+    budgets = dict(budgets or allocate.V5E_BUDGETS)
+    chosen = []
+    remaining = {k: v * 0.8 for k, v in budgets.items()}
+    for spec in cfg.layers:
+        if spec.block is not None:
+            chosen.append(spec.block)
+            continue
+        best, best_score = "conv1", -1.0
+        for b in ("conv4", "conv3", "conv2", "conv1"):
+            demand = bm.demand(b, spec.data_bits, spec.coeff_bits)
+            if any(demand[r] > remaining[r] for r in demand):
+                continue
+            score = bm.convs[b] / (1e-12 + sum(
+                demand[r] / budgets[r] for r in demand))
+            if score > best_score:
+                best, best_score = b, score
+        demand = bm.demand(best, spec.data_bits, spec.coeff_bits)
+        for r in demand:
+            remaining[r] = max(0.0, remaining[r] - demand[r])
+        chosen.append(best)
+    return chosen
+
+
+def init_cnn(key, cfg: CNNConfig):
+    params = []
+    for i, spec in enumerate(cfg.layers):
+        k = jax.random.fold_in(key, i)
+        w = jax.random.normal(
+            k, (spec.out_channels, spec.in_channels, 3, 3), jnp.float32)
+        scale = (1 << (spec.coeff_bits - 2)) / 3.0
+        params.append(ops.quantize_fixed(w * scale, spec.coeff_bits))
+    return params
+
+
+def _run_block_conv(block, x2d, w2d, spec):
+    y = ops.conv_block(block, x2d, w2d, data_bits=spec.data_bits,
+                       coeff_bits=spec.coeff_bits)
+    return y
+
+
+def cnn_forward(params, x, cfg: CNNConfig, blocks: List[str]):
+    """x: (H, W, C_in) quantized ints.  Returns (H, W, C_out) of the last
+    layer.  Each (out_ch, in_ch) plane runs through its assigned block;
+    dual-output blocks (conv3/conv4) process two output channels per call
+    — the paper's 2-convolutions-per-DSP win, visible as half the calls.
+    """
+    act = x
+    for spec, w, block in zip(cfg.layers, params, blocks):
+        h, wd, cin = act.shape
+        acc = jnp.zeros((spec.out_channels, h, wd), jnp.int32)
+        dual = block in ("conv3", "conv4")
+        step = 2 if dual else 1
+        for oc in range(0, spec.out_channels, step):
+            for ic in range(cin):
+                x2d = act[:, :, ic]
+                if dual:
+                    oc2 = min(oc + 1, spec.out_channels - 1)
+                    w2 = jnp.stack([w[oc, ic], w[oc2, ic]])
+                    y = _run_block_conv(block, x2d, w2, spec)
+                    acc = acc.at[oc].add(y[0])
+                    if oc2 != oc:
+                        acc = acc.at[oc2].add(y[1])
+                else:
+                    y = _run_block_conv(block, x2d, w[oc, ic], spec)
+                    acc = acc.at[oc].add(y)
+        # rescale + ReLU + requantize
+        lo, hi = 0, (1 << (spec.data_bits - 1)) - 1
+        act = jnp.clip(acc >> spec.shift, lo, hi) \
+            .astype(conv2d.container_dtype(spec.data_bits)) \
+            .transpose(1, 2, 0)
+    return act
+
+
+def cnn_forward_ref(params, x, cfg: CNNConfig):
+    """Float-free oracle using the ref conv (exact same integer math)."""
+    from repro.kernels import ref
+    act = x
+    for spec, w in zip(cfg.layers, params):
+        h, wd, cin = act.shape
+        acc = jnp.zeros((spec.out_channels, h, wd), jnp.int32)
+        for oc in range(spec.out_channels):
+            for ic in range(cin):
+                acc = acc.at[oc].add(
+                    ref.conv2d_3x3_ref(act[:, :, ic], w[oc, ic]))
+        lo, hi = 0, (1 << (spec.data_bits - 1)) - 1
+        act = jnp.clip(acc >> spec.shift, lo, hi) \
+            .astype(conv2d.container_dtype(spec.data_bits)) \
+            .transpose(1, 2, 0)
+    return act

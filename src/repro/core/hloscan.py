@@ -1,0 +1,425 @@
+"""Compiled-artifact analysis: the TPU analogue of the paper's synthesis
+resource report.
+
+* ``collective_bytes(hlo_text)`` — scrape post-SPMD HLO for all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute and sum
+  wire bytes per chip (ring-model factors).
+* ``cost_summary(compiled)`` — FLOPs / bytes from ``cost_analysis()``.
+* ``jaxpr_resources(fn, *args)`` — pre-XLA op-class census used by the
+  convolution-block sweep: MXU flops (dot/conv), VPU elementwise ops,
+  accumulation-add chain length (the carry-chain analogue), and byte
+  traffic, recursing through scan/pjit/remat with trip-count multipliers.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# wire-traffic factor per result byte (ring algorithms, large-n limit)
+_COLLECTIVE_FACTOR = {
+    "all-gather": 1.0,        # each chip receives (n-1)/n of the result
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?(?:,\s*)?)+)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-class wire bytes (per chip) from post-SPMD HLO text."""
+    out: Dict[str, float] = defaultdict(float)
+    for m in _COLL_RE.finditer(hlo_text):
+        types, op, _start = m.group(1), m.group(2), m.group(3)
+        out[op] += _shape_bytes(types) * _COLLECTIVE_FACTOR[op]
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for m in _COLL_RE.finditer(hlo_text):
+        out[m.group(2)] += 1
+    return dict(out)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    for k, v in ca.items():
+        if k.startswith("bytes accessed") and isinstance(v, (int, float)):
+            out.setdefault("bytes_detail", {})[k] = float(v)
+    return out
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0.0)
+                              + out.get("output_size_in_bytes", 0.0)
+                              + out.get("temp_size_in_bytes", 0.0)
+                              - out.get("alias_size_in_bytes", 0.0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware HLO module analyzer
+# ---------------------------------------------------------------------------
+# XLA's cost_analysis() counts while-loop bodies ONCE, so any scanned layer
+# stack is undercounted by its trip count.  This analyzer walks the
+# post-optimization (per-device) HLO text from the ENTRY computation,
+# multiplying through while-loop trip counts:
+#   * flops      — dot/convolution ops (including inside fusions)
+#   * hbm_bytes  — operand+result bytes of top-level macro ops (fusion
+#                  internals stay in registers/VMEM; fusion boundaries are
+#                  the HBM traffic)
+#   * collective — wire bytes per chip with ring-model factors
+# It is also the dry-run "profiler": per-op-class tallies expose redundant
+# collectives and remat recompute for the §Perf iterations.
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INST = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[^\]]*\]"
+    r"(?:\{[^}]*\})?)\s*([a-z][a-z0-9\-]*)\((.*)$")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR = re.compile(
+    r"(?:calls|body|condition|true_computation|false_computation|to_apply|"
+    r"branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_DIMS_ATTR = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_ATTR = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+_MACRO_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "copy", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "sort", "reduce",
+    "broadcast", "transpose", "reshape", "slice", "concatenate", "pad",
+    "iota", "convert", "select-and-scatter", "cholesky",
+    "triangular-solve", "rng", "custom-call",
+}
+_COLLECTIVES = set(_COLLECTIVE_FACTOR)
+
+
+def _parse_dims(type_str: str):
+    """First shape in a (possibly tuple) type string -> (dtype, [dims])."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",") if d] if dims else []
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, list] = {}
+        self.shapes: Dict[str, str] = {}
+        self.entry = None
+        cur = None
+        for line in text.splitlines():
+            hdr = _COMP_HDR.match(line)
+            if hdr:
+                cur = hdr.group(2)
+                self.computations[cur] = []
+                if hdr.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            m = _INST.match(line)
+            if m:
+                name, type_str, op, rest = m.groups()
+                self.computations[cur].append((name, type_str, op, rest))
+                self.shapes[name] = type_str
+        # parameter shapes are declared as instructions ("parameter(0)"),
+        # so the def map above already covers them.
+
+    # -- helpers -----------------------------------------------------------
+    def _trip_count(self, cond_name: str, depth: int = 0) -> int:
+        """Loop bound from the while condition: the largest integer constant
+        in the condition computation (or its callees).  Scans are lowered
+        with a `lt(counter, constant(N))` condition, so this recovers N."""
+        best = 1
+        if depth > 3:
+            return best
+        for name, _, op, rest in self.computations.get(cond_name, []):
+            if op == "constant":
+                cm = re.match(r"\s*(\d+)\s*\)", rest)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+            cm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", rest)
+            if cm:
+                best = max(best, self._trip_count(cm.group(1), depth + 1))
+        return best
+
+    def _dot_flops(self, type_str: str, rest: str) -> float:
+        _, out_dims = _parse_dims(type_str)
+        out = 1
+        for d in out_dims:
+            out *= d
+        ops = _OPERAND.findall(rest.split(")", 1)[0])
+        k = 1
+        if ops:
+            lhs_type = self.shapes.get(ops[0], "")
+            _, lhs_dims = _parse_dims(lhs_type)
+            cm = _DIMS_ATTR.search(rest)
+            if cm and lhs_dims:
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        k *= lhs_dims[int(idx)]
+        return 2.0 * out * k
+
+    def _operand_bytes_list(self, rest: str):
+        args = rest.split(")", 1)[0]
+        return [_shape_bytes(self.shapes.get(name, ""))
+                for name in _OPERAND.findall(args)]
+
+    def _operand_bytes(self, rest: str) -> float:
+        return sum(self._operand_bytes_list(rest))
+
+    def _macro_traffic(self, name: str, type_str: str, op: str,
+                       rest: str) -> float:
+        """HBM traffic of one top-level macro op.
+
+        Slice-like ops (and fusions rooted in them — XLA names fusions
+        after their root) move only their *output*-sized window, not the
+        whole operand: counting the 28-layer stacked-weight carry per scan
+        iteration would overstate traffic ~depth-fold.  Update-slice roots
+        move only the update window of their (aliased, in-place) buffer.
+        """
+        out_b = _shape_bytes(type_str)
+        ops_b = self._operand_bytes_list(rest)
+        tag = name if op == "fusion" else op
+        tag = tag.replace("_", "-")
+        if "dynamic-update-slice" in tag or "scatter" in tag:
+            small = sum(ops_b) - (max(ops_b) if ops_b else 0.0)
+            return 2.0 * small
+        if "dynamic-slice" in tag or "gather" in tag or \
+                tag.startswith("slice") or "-slice" in tag:
+            return 2.0 * out_b
+        return out_b + sum(ops_b)
+
+    # -- main walk -----------------------------------------------------------
+    def analyze(self) -> Dict[str, float]:
+        res = defaultdict(float)
+        self._walk(self.entry, 1.0, res, top=True)
+        res["collective_total"] = sum(
+            v for k, v in res.items() if k.startswith("coll_"))
+        return dict(res)
+
+    def _walk(self, comp: str, mult: float, res, *, top: bool):
+        for name, type_str, op, rest in self.computations.get(comp, []):
+            if op in ("dot", "convolution"):
+                res["flops"] += mult * self._dot_flops(type_str, rest)
+            if op in _COLLECTIVES:
+                b = _shape_bytes(type_str) * _COLLECTIVE_FACTOR[op]
+                res[f"coll_{op}"] += mult * b
+                res[f"colln_{op}"] += mult
+            if top and op in _MACRO_TRAFFIC_OPS:
+                res["hbm_bytes"] += mult * self._macro_traffic(
+                    name, type_str, op, rest)
+            if op == "while":
+                body_m = re.search(r"body=%?([\w.\-]+)", rest)
+                cond_m = re.search(r"condition=%?([\w.\-]+)", rest)
+                body = body_m.group(1) if body_m else None
+                cond = cond_m.group(1) if cond_m else None
+                trip_m = _TRIP_CFG.search(rest)   # XLA's own loop analysis
+                if trip_m:
+                    trip = int(trip_m.group(1))
+                else:
+                    trip = self._trip_count(cond) if cond else 1
+                res["while_trips"] = max(res.get("while_trips", 0), trip)
+                if body:
+                    self._walk(body, mult * trip, res, top=top)
+            elif op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", rest)
+                if cm:
+                    self._walk(cm.group(1), mult, res, top=False)
+            elif op == "conditional":
+                for cname in re.findall(
+                        r"computation[s]?=\{?%?([\w.\-]+)", rest):
+                    self._walk(cname, mult, res, top=top)
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    mod = HloModule(text)
+    out = mod.analyze()
+    out["collectives"] = {
+        k.removeprefix("coll_"): v for k, v in out.items()
+        if isinstance(v, float) and k.startswith("coll_")}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level op census (the block-sweep "synthesis report")
+# ---------------------------------------------------------------------------
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh",
+    "logistic", "erf", "rsqrt", "sqrt", "neg", "sign", "floor", "round",
+    "clamp", "select_n", "and", "or", "xor", "not", "shift_left",
+    "shift_right_logical", "shift_right_arithmetic", "rem", "pow",
+    "integer_pow", "abs", "ge", "gt", "le", "lt", "eq", "ne",
+    "convert_element_type", "nextafter",
+}
+
+_ADD_LIKE = {"add", "sub"}
+_MEMORY_OPS = {"gather", "scatter", "scatter-add", "dynamic_slice",
+               "dynamic_update_slice", "concatenate", "pad", "slice",
+               "reshape", "transpose", "broadcast_in_dim", "rev", "squeeze"}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 1
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> int:
+    (lhs, rhs) = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    m = _size_excluding(lhs, list(lc) + list(lb))
+    n = _size_excluding(rhs, list(rc) + list(rb))
+    k = 1
+    for i in lc:
+        k *= lhs.shape[i]
+    b = 1
+    for i in lb:
+        b *= lhs.shape[i]
+    return 2 * m * n * k * b
+
+
+def _size_excluding(aval, axes) -> int:
+    out = 1
+    for i, d in enumerate(aval.shape):
+        if i not in axes:
+            out *= d
+    return out
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    dn = eqn.params["dimension_numbers"]
+    k_spatial = [rhs.shape[i] for i in dn.rhs_spec[2:]]
+    cin = rhs.shape[dn.rhs_spec[1]]
+    flops = 2 * _size(out) * cin
+    for k in k_spatial:
+        flops *= k
+    return flops
+
+
+def jaxpr_resources(fn, *args, **kwargs) -> Dict[str, float]:
+    jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
+    res = defaultdict(float)
+
+    def walk(jx, mult: float):
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            if prim == "dot_general":
+                f = _dot_flops(eqn)
+                res["mxu_flops"] += mult * f
+                # issue-slot cost: the MXU runs int8 at 4× the int32 rate
+                # (the DSP-width analogue — see DESIGN.md §2)
+                wid = max(v.aval.dtype.itemsize for v in eqn.invars)
+                res["mxu_cost"] += mult * f * wid / 4.0
+            elif prim == "conv_general_dilated":
+                f = _conv_flops(eqn)
+                res["mxu_flops"] += mult * f
+                wid = max(v.aval.dtype.itemsize for v in eqn.invars)
+                res["mxu_cost"] += mult * f * wid / 4.0
+            elif prim in _ELEMENTWISE:
+                n = sum(_size(o.aval) for o in eqn.outvars)
+                res["vpu_count"] += mult * n
+                # lane cost ∝ container width (int16 = 2× int32 throughput)
+                wid = max(o.aval.dtype.itemsize for o in eqn.outvars)
+                res["vpu_ops"] += mult * n * wid / 4.0
+                if prim in _ADD_LIKE:
+                    res["add_chain"] += mult * n * wid / 4.0
+            elif prim in ("reduce_sum", "reduce_max", "reduce_min",
+                          "reduce_prod", "cumsum", "cumlogsumexp",
+                          "argmax", "argmin"):
+                n = sum(_size(v.aval) for v in eqn.invars)
+                res["vpu_ops"] += mult * n
+                res["add_chain"] += mult * n
+            elif prim in _MEMORY_OPS:
+                res["mem_move_bytes"] += mult * sum(
+                    _bytes(o.aval) for o in eqn.outvars)
+            res["temp_bytes"] += mult * sum(
+                _bytes(o.aval) for o in eqn.outvars)
+            # recurse
+            sub_mult = mult
+            if prim == "scan":
+                sub_mult = mult * eqn.params.get("length", 1)
+            elif prim == "pallas_call":
+                gm = eqn.params.get("grid_mapping")
+                for g in getattr(gm, "grid", ()) or ():
+                    if isinstance(g, int):
+                        sub_mult *= g
+            for pname in ("jaxpr", "call_jaxpr"):
+                sub = eqn.params.get(pname)
+                if sub is None:
+                    continue
+                inner = getattr(sub, "jaxpr", sub)
+                walk(inner, sub_mult)
+            if prim == "pjit" and "jaxpr" not in eqn.params:
+                sub = eqn.params.get("name")
+            if prim == "custom_vjp_call" or prim == "custom_jvp_call":
+                sub = eqn.params.get("call_jaxpr")
+                if sub is not None:
+                    walk(getattr(sub, "jaxpr", sub), mult)
+
+    walk(jaxpr.jaxpr, 1.0)
+    res["arg_bytes"] = sum(_bytes(v.aval) for v in jaxpr.jaxpr.invars)
+    res["out_bytes"] = sum(_bytes(v.aval) for v in jaxpr.jaxpr.outvars)
+    res["hbm_bytes"] = res["arg_bytes"] + res["out_bytes"]
+    return dict(res)

@@ -1,0 +1,117 @@
+"""Roofline terms from dry-run artifacts (TPU v5e targets).
+
+  compute    = HLO_FLOPs   / (chips · 197 TFLOP/s)
+  memory     = HLO_bytes   / (chips · 819 GB/s)
+  collective = wire_bytes  / (chips · 50 GB/s·link)   [already per chip]
+
+cost_analysis() reports whole-program FLOPs/bytes for the *per-device*
+partitioned module, so FLOPs/bytes are divided by chips only when the
+source is a global count; collective bytes scraped from post-SPMD HLO are
+per-chip already.  MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) with N
+the active parameter count — the useful-work yardstick that exposes
+remat/dispatch overhead in the HLO_FLOPs ratio.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, 1 link used)
+
+
+_SHAPE_META = {
+    "train_4k": ("train", 4096, 256),
+    "prefill_32k": ("prefill", 32768, 32),
+    "decode_32k": ("decode", 32768, 128),
+    "long_500k": ("decode", 524288, 1),
+}
+
+
+def min_bytes(result: Dict) -> float:
+    """Lower bound on HBM bytes that MUST move per step (global):
+    weights (+ optimizer state round-trip for train) + KV/state cache for
+    decode — the memory-side roofline floor."""
+    n, n_act = result["params"], result["active_params"]
+    kind, seq, batch = _SHAPE_META[result["shape"]]
+    if kind == "train":
+        # read bf16 params + write grads + read/write fp32 m,v + param write
+        return n * (2 + 2 + 16 + 2)
+    if kind == "prefill":
+        return n * 2
+    # decode: active weights stream once per token + cache read
+    from repro.configs import get_config
+    try:
+        cfg = get_config(result["arch"])
+        n_attn = sum(1 for s in cfg.layer_cycle
+                     if s.mixer in ("attn", "local")) * cfg.n_cycles
+        cache = n_attn * 2 * seq * batch * cfg.kv_dim * 2
+        if cfg.ssm is not None:
+            n_mamba = sum(1 for s in cfg.layer_cycle
+                          if s.mixer == "mamba") * cfg.n_cycles
+            inner = cfg.ssm.expand * cfg.d_model
+            nh = inner // cfg.ssm.head_dim
+            cache += n_mamba * batch * nh * cfg.ssm.state_dim * \
+                cfg.ssm.head_dim * 4
+    except Exception:
+        cache = 0.0
+    return n_act * 2 + cache
+
+
+def model_flops(result: Dict) -> float:
+    """Useful FLOPs per step for the cell, from analytic param counts."""
+    n_active = result["active_params"]
+    shape = result["shape"]
+    kind = {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 32768,
+           "long_500k": 524288}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+             "long_500k": 1}[shape]
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        return 2.0 * n_active * seq * batch
+    return 2.0 * n_active * batch           # one new token per sequence
+
+
+def roofline_terms(result: Dict) -> Dict:
+    chips = result["n_chips"]
+    hlo = result.get("hlo", {})
+    if "flops" in hlo:
+        # trip-count-aware analyzer values (per-device module)
+        flops_dev = hlo["flops"]
+        bytes_dev = hlo["hbm_bytes"]
+        coll = hlo.get("collective_total", 0.0)
+    else:  # fall back to cost_analysis (undercounts while-loop bodies)
+        cost = result["cost"]
+        flops_dev = cost["flops"]
+        bytes_dev = cost["bytes_accessed"]
+        coll = result.get("collectives", {}).get("total", 0.0)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(result)
+    useful_ratio = mf / max(flops_dev * chips, 1.0)
+    # the ideal step is bounded by BOTH the useful compute and the
+    # minimal weight/cache traffic (decode is legitimately memory-bound)
+    ideal = max(mf / (chips * PEAK_FLOPS),
+                min_bytes(result) / (chips * HBM_BW))
+    bound = max(terms.values())
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": flops_dev * chips,
+        "useful_flops_ratio": useful_ratio,
+        "ideal_s": ideal,
+        "roofline_fraction": ideal / bound if bound > 0 else 0.0,
+    }

@@ -1,0 +1,105 @@
+"""The "synthesis" sweep (paper §3.2), FPGA→TPU.
+
+For every block × (data_bits, coeff_bits) ∈ [3..16]² — 196 configurations
+per block, 784 total — trace the Pallas kernel and extract its resource
+vector with the jaxpr op census (core/hloscan.py).  This is the analogue of
+running Vivado synthesis per configuration and scraping the utilization
+report; results are cached to JSON so downstream analyses (correlation,
+model fitting, allocation) never re-trace.
+
+Resource classes and their FPGA counterparts:
+
+  vpu_ops        ↔ LLUT   (elementwise combinational work)
+  add_chain      ↔ CChain (accumulation adds)
+  mxu_flops      ↔ DSP    (dot/conv MACs)
+  mem_move_bytes ↔ MLUT   (distributed-memory movement)
+  temp_bytes     ↔ FF     (live intermediate storage)
+  hbm_bytes      ↔ BRAM   (block-memory traffic)
+  vmem_bytes     — the Pallas BlockSpec working set (VMEM footprint)
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_conv import ConvSweepConfig, SWEEP
+from repro.core import hloscan
+from repro.kernels import conv2d, ops
+
+RESOURCES = ["vpu_ops", "add_chain", "mxu_cost", "mxu_flops",
+             "mem_move_bytes", "temp_bytes", "hbm_bytes", "vmem_bytes"]
+
+_FPGA_NAME = {
+    "vpu_ops": "LLUT", "add_chain": "CChain", "mxu_cost": "DSP",
+    "mxu_flops": "DSP_raw", "mem_move_bytes": "MLUT", "temp_bytes": "FF",
+    "hbm_bytes": "BRAM", "vmem_bytes": "VMEM",
+}
+
+
+def fpga_name(resource: str) -> str:
+    return _FPGA_NAME.get(resource, resource)
+
+
+def _vmem_bytes(cfg: ConvSweepConfig, data_bits: int, coeff_bits: int,
+                n_out: int) -> float:
+    """Analytic BlockSpec working set: padded image + weights + out tile."""
+    img_h = 4 * cfg.tile_h  # sweep image height (4 tiles)
+    d_item = 1 if data_bits <= 8 else 2
+    c_item = 1 if coeff_bits <= 8 else 2
+    img = (img_h + 2) * (cfg.tile_w + 2) * 4        # int32 padded in VMEM
+    wk = n_out * 9 * c_item
+    out = n_out * cfg.tile_h * cfg.tile_w * 4
+    return float(img + wk + out + d_item * 0)       # container noted via hbm
+
+
+def synth_one(block: str, data_bits: int, coeff_bits: int,
+              cfg: ConvSweepConfig = SWEEP) -> Dict[str, float]:
+    h, w = 4 * cfg.tile_h, cfg.tile_w
+    x = jnp.zeros((h, w), conv2d.container_dtype(data_bits))
+    n_out = 2 if block in ("conv3", "conv4") else 1
+    wshape = (2, 3, 3) if n_out == 2 else (3, 3)
+    wk = jnp.zeros(wshape, conv2d.container_dtype(coeff_bits))
+
+    res = hloscan.jaxpr_resources(
+        lambda a, b: ops.conv_block(block, a, b, data_bits=data_bits,
+                                    coeff_bits=coeff_bits,
+                                    tile_h=cfg.tile_h),
+        x, wk)
+    out = {k: float(res.get(k, 0.0)) for k in RESOURCES if k != "vmem_bytes"}
+    out["vmem_bytes"] = _vmem_bytes(cfg, data_bits, coeff_bits, n_out)
+    out["convs_per_step"] = float(n_out)
+    out["packed"] = float(block == "conv3"
+                          and conv2d.conv3_packed_ok(data_bits, coeff_bits))
+    return out
+
+
+def run_sweep(cfg: ConvSweepConfig = SWEEP,
+              cache_path: str | Path = "benchmarks/_cache/synth.json",
+              force: bool = False) -> List[dict]:
+    cache = Path(cache_path)
+    if cache.exists() and not force:
+        return json.loads(cache.read_text())
+    rows = []
+    for block in cfg.blocks:
+        for d in cfg.data_bits:
+            for c in cfg.coeff_bits:
+                row = {"block": block, "data_bits": d, "coeff_bits": c}
+                row.update(synth_one(block, d, c, cfg))
+                rows.append(row)
+    cache.parent.mkdir(parents=True, exist_ok=True)
+    cache.write_text(json.dumps(rows))
+    return rows
+
+
+def sweep_arrays(rows: List[dict], block: str):
+    """(d, c, {resource: y}) numpy arrays for one block."""
+    sel = [r for r in rows if r["block"] == block]
+    d = np.array([r["data_bits"] for r in sel], float)
+    c = np.array([r["coeff_bits"] for r in sel], float)
+    ys = {k: np.array([r[k] for r in sel], float) for k in RESOURCES}
+    return d, c, ys

@@ -1,0 +1,56 @@
+"""Depthwise causal conv1d Pallas kernel — the 1-D member of the paper's
+block library, used by the Mamba/Jamba SSM path.
+
+Depthwise convolution has no contraction dimension to feed the MXU, so this
+is a Conv1-family (VPU) block: K shifted multiply-adds per tile.  Tiling:
+sequence in row-tiles, channels across lanes (128-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, k, ts, c):
+    i = pl.program_id(0)
+    xpad = jax.lax.dynamic_slice(
+        x_ref[...], (i * ts, 0), (ts + k - 1, c))
+    wk = w_ref[...]
+    acc = jnp.zeros((ts, c), jnp.float32)
+    for j in range(k):                           # VPU multiply-add chain
+        acc = acc + xpad[j:j + ts, :].astype(jnp.float32) * \
+            wk[j][None, :].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+def causal_conv1d_pallas(x, w, *, tile_s: int = 128,
+                         interpret: bool = True):
+    """x: (B, S, C); w: (K, C).  Returns (B, S, C) float32 (pre-silu).
+
+    Batched by vmap over B; each call tiles the sequence with a K-1 halo.
+    """
+    k, c = w.shape
+    b, s, cc = x.shape
+    assert cc == c
+    ts = min(tile_s, s)
+    pad_s = (-s) % ts
+
+    def one(xb):
+        xp = jnp.pad(xb, ((k - 1, pad_s), (0, 0)))   # causal left-pad
+        grid = (s + pad_s) // ts
+        y = pl.pallas_call(
+            functools.partial(_kernel, k=k, ts=ts, c=c),
+            grid=(grid,),
+            in_specs=[pl.BlockSpec(xp.shape, lambda i: (0, 0)),
+                      pl.BlockSpec(w.shape, lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((ts, c), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((s + pad_s, c), jnp.float32),
+            interpret=interpret,
+        )(xp, w)
+        return y[:s]
+
+    return jax.vmap(one)(x)

@@ -1,0 +1,214 @@
+"""The paper's four parameterizable convolution blocks as Pallas TPU kernels.
+
+FPGA→TPU adaptation (DESIGN.md §2): fixed-point 3×3 convolution over an
+image tile streamed through VMEM, one output row-tile per grid step ("one
+convolution per cycle" → one tile per grid step).
+
+  Conv1  multiply-free shift-add (VPU / LUT+carry-chain analogue):
+         each coefficient multiply is unrolled into ``coeff_bits``
+         mask-and-add passes — op count is *linear in coeff_bits*,
+         zero MXU work.
+  Conv2  im2col + one integer dot on the MXU (1-DSP analogue).
+  Conv3  two coefficient planes packed into one integer operand
+         (w_hi·2^S + w_lo): a single dot yields both convolutions,
+         split arithmetically after accumulation.  Valid while both
+         results fit the 32-bit accumulator guard bits
+         (data_bits + coeff_bits ≤ 12 — the TPU analogue of the paper's
+         ≤8-bit DSP-packing constraint; the FPGA DSP48 has a 48-bit
+         accumulator where int TPU lanes have 32).  Outside that regime
+         the block degrades to two dots — the discontinuity the paper's
+         segmented regression models.
+  Conv4  two parallel dots (2-DSP analogue), two convolutions per step.
+
+Containers: data/coeff values quantized to ``*_bits`` live in the smallest
+supported integer container (int8 ≤ 8 bits, else int16); arithmetic is
+exact in int32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK_SHIFT_BUDGET = 31          # int32 accumulator bits
+PACKED_LIMIT = 12               # data_bits + coeff_bits ≤ 12 → packed mode
+
+
+def container_dtype(bits: int):
+    return jnp.int8 if bits <= 8 else jnp.int16
+
+
+def conv3_packed_ok(data_bits: int, coeff_bits: int) -> bool:
+    return data_bits + coeff_bits <= PACKED_LIMIT
+
+
+def _pack_shift(data_bits: int, coeff_bits: int) -> int:
+    # |y| <= 9 · 2^(d-1) · 2^(c-1) < 2^(d+c+2); one guard bit for sign.
+    return data_bits + coeff_bits + 3
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies (operate on one padded row-tile in VMEM)
+# ---------------------------------------------------------------------------
+
+def _taps(xpad, th, w):
+    """9 shifted (th, w) views of the (th+2, w+2) padded tile."""
+    return [xpad[di:di + th, dj:dj + w]
+            for di in range(3) for dj in range(3)]
+
+
+def _acc_dtype(data_bits: int, coeff_bits: int):
+    """Narrowest safe accumulator for 9 taps of d-bit × c-bit products:
+    needs d+c-1 product bits + 4 accumulation bits + sign.  Narrow
+    accumulation doubles VPU lane throughput — the TPU analogue of the
+    datapath-width ∝ LUT-count effect the paper measures."""
+    need = data_bits + coeff_bits + 5
+    return jnp.int16 if need <= 16 else jnp.int32
+
+
+def _conv1_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
+    i = pl.program_id(0)
+    adt = _acc_dtype(data_bits, coeff_bits)
+    xpad = jax.lax.dynamic_slice(
+        x_ref[...], (i * th, 0), (th + 2, w + 2)).astype(adt)
+    wk = w_ref[...].astype(adt)
+    acc = jnp.zeros((th, w), adt)
+    taps = _taps(xpad, th, w)
+    for t, (di, dj) in enumerate((a, b) for a in range(3) for b in range(3)):
+        c = wk[di, dj]
+        mag = jnp.abs(c)
+        sign = jnp.where(c < 0, adt(-1), adt(1))
+        part = jnp.zeros((th, w), adt)
+        for b in range(coeff_bits):          # unrolled: ops ∝ coeff_bits
+            bit = (mag >> b) & 1
+            part = part + jnp.where(bit == 1,
+                                    taps[t] << b,
+                                    jnp.zeros((th, w), adt))
+        acc = acc + sign * part
+    o_ref[...] = acc.astype(jnp.int32)
+
+
+def _im2col(xpad, th, w):
+    return jnp.stack(_taps(xpad, th, w), axis=-1).reshape(th * w, 9)
+
+
+def _dot_dtype(data_bits: int, coeff_bits: int):
+    """Keep native int8 operands when possible: the MXU's low-precision
+    rate is the analogue of fitting the DSP's 27×18 multiplier."""
+    return jnp.int8 if (data_bits <= 8 and coeff_bits <= 8) else jnp.int32
+
+
+def _conv2_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
+    i = pl.program_id(0)
+    ddt = _dot_dtype(data_bits, coeff_bits)
+    xpad = jax.lax.dynamic_slice(
+        x_ref[...], (i * th, 0), (th + 2, w + 2)).astype(ddt)
+    patches = _im2col(xpad, th, w)
+    wk = w_ref[...].astype(ddt).reshape(9)
+    y = jax.lax.dot_general(patches, wk[:, None], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+    o_ref[...] = y.reshape(th, w)
+
+
+def _conv3_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
+    i = pl.program_id(0)
+    xpad = jax.lax.dynamic_slice(
+        x_ref[...], (i * th, 0), (th + 2, w + 2)).astype(jnp.int32)
+    patches = _im2col(xpad, th, w)
+    wk = w_ref[...].astype(jnp.int32)            # (2, 3, 3)
+    if conv3_packed_ok(data_bits, coeff_bits):
+        s = _pack_shift(data_bits, coeff_bits)
+        packed = (wk[0].reshape(9) << s) + wk[1].reshape(9)
+        acc = jax.lax.dot_general(
+            patches, packed[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32).reshape(th, w)
+        half = jnp.int32(1 << (s - 1))
+        lo = ((acc + half) & ((1 << s) - 1)) - half      # signed low field
+        hi = (acc - lo) >> s
+        o_ref[0] = hi
+        o_ref[1] = lo
+    else:  # fallback: packing infeasible → two dots (degenerates to Conv4)
+        ddt = _dot_dtype(data_bits, coeff_bits)
+        for j in range(2):
+            y = jax.lax.dot_general(
+                patches.astype(ddt), wk[j].reshape(9)[:, None].astype(ddt),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            o_ref[j] = y.reshape(th, w)
+
+
+def _conv4_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
+    i = pl.program_id(0)
+    ddt = _dot_dtype(data_bits, coeff_bits)
+    xpad = jax.lax.dynamic_slice(
+        x_ref[...], (i * th, 0), (th + 2, w + 2)).astype(ddt)
+    patches = _im2col(xpad, th, w)
+    wk = w_ref[...].astype(ddt)                  # (2, 3, 3)
+    for j in range(2):                           # two parallel "DSPs"
+        y = jax.lax.dot_general(
+            patches, wk[j].reshape(9)[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        o_ref[j] = y.reshape(th, w)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _call(kernel, xpad, wk, *, th, w, n_out, interpret):
+    grid = (xpad.shape[0] - 2) // th
+    out_shape = ((n_out, th * grid, w) if n_out > 1
+                 else (th * grid, w))
+    out_block = ((n_out, th, w) if n_out > 1 else (th, w))
+    out_index = ((lambda i: (0, i, 0)) if n_out > 1
+                 else (lambda i: (i, 0)))
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(xpad.shape, lambda i: (0, 0)),   # whole image VMEM
+            pl.BlockSpec(wk.shape, (lambda i: (0, 0)) if wk.ndim == 2
+                         else (lambda i: (0, 0, 0))),
+        ],
+        out_specs=pl.BlockSpec(out_block, out_index),
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.int32),
+        interpret=interpret,
+    )(xpad, wk)
+
+
+def conv_block(block: str, x, wk, *, data_bits: int, coeff_bits: int,
+               tile_h: int = 16, interpret: bool = True):
+    """Run one paper block.  x: (H, W) container int; wk: (3,3) for
+    conv1/conv2, (2,3,3) for conv3/conv4.  Returns int32 conv output
+    ((H, W) or (2, H, W)), zero-padded 'same' semantics."""
+    h, w = x.shape
+    assert h % tile_h == 0, (h, tile_h)
+    xpad = jnp.pad(x.astype(jnp.int32), ((1, 1), (1, 1)))
+    if block == "conv1":
+        kern = functools.partial(_conv1_kernel, th=tile_h, w=w,
+                                 data_bits=data_bits,
+                                 coeff_bits=coeff_bits)
+        return _call(kern, xpad, wk, th=tile_h, w=w, n_out=1,
+                     interpret=interpret)
+    if block == "conv2":
+        kern = functools.partial(_conv2_kernel, th=tile_h, w=w,
+                                 data_bits=data_bits,
+                                 coeff_bits=coeff_bits)
+        return _call(kern, xpad, wk, th=tile_h, w=w, n_out=1,
+                     interpret=interpret)
+    if block == "conv3":
+        kern = functools.partial(_conv3_kernel, th=tile_h, w=w,
+                                 data_bits=data_bits,
+                                 coeff_bits=coeff_bits)
+        return _call(kern, xpad, wk, th=tile_h, w=w, n_out=2,
+                     interpret=interpret)
+    if block == "conv4":
+        kern = functools.partial(_conv4_kernel, th=tile_h, w=w,
+                                 data_bits=data_bits,
+                                 coeff_bits=coeff_bits)
+        return _call(kern, xpad, wk, th=tile_h, w=w, n_out=2,
+                     interpret=interpret)
+    raise ValueError(f"unknown block {block!r}")

@@ -1,0 +1,103 @@
+"""Flash attention as a Pallas TPU kernel (online-softmax, VMEM-resident
+logits).
+
+This is the fix for the dominant memory term of the dense §Roofline cells:
+the jnp chunked-attention path materializes (chunk × T) f32 logits +
+softmax intermediates in HBM every layer; this kernel keeps the running
+(bq × bk) tile, the row max/denominator and the output accumulator in VMEM
+and writes only the (S × Dh) output — O(S·Dh) HBM traffic instead of
+O(S·T) per head.
+
+Tiling: grid over query blocks; K/V live in VMEM as full blocks (fits for
+T ≤ ~8k at Dh=128; production sizes stream K/V via a second grid dim —
+same math, the online-softmax update is associative).  Batch and heads are
+vmapped (TPU lowers that to a leading grid dimension).
+
+Validated in interpret mode against the pure-jnp oracle
+(tests/test_flash_attention.py); the model's jnp path remains the host
+dry-run implementation (DESIGN.md §8.4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, t, d, scale,
+                  causal):
+    i = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32) * scale            # (bq, d)
+    n_kv = t // bk
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[...], (j * bk, 0),
+                                  (bk, d)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[...], (j * bk, 0),
+                                  (bk, d)).astype(jnp.float32)
+        s = q @ k.T                                        # (bq, bk)
+        if causal:
+            rows = i * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (bq, bk), 0)
+            cols = j * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (B, S, H, Dh); k, v: (B, T, KH, Dh) -> (B, S, H, Dh).
+
+    GQA: query head h reads kv head h // (H // KH).
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, t=t, d=d,
+                               scale=scale, causal=causal)
+
+    def one_head(qh, kh_, vh_):
+        return pl.pallas_call(
+            kernel,
+            grid=(s // bq,),
+            in_specs=[pl.BlockSpec((bq, d), lambda i: (i, 0)),
+                      pl.BlockSpec((t, d), lambda i: (0, 0)),
+                      pl.BlockSpec((t, d), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((s, d), q.dtype),
+            interpret=interpret,
+        )(qh, kh_, vh_)
+
+    def one_batch(qb, kb, vb):
+        # (S,H,D) -> per-head call, mapping GQA heads to kv groups
+        qh = jnp.moveaxis(qb, 1, 0)                        # (H, S, D)
+        kv_idx = jnp.arange(h) // g
+        kb_h = jnp.moveaxis(kb, 1, 0)[kv_idx]              # (H, T, D)
+        vb_h = jnp.moveaxis(vb, 1, 0)[kv_idx]
+        out = jax.vmap(one_head)(qh, kb_h, vb_h)           # (H, S, D)
+        return jnp.moveaxis(out, 0, 1)
+
+    return jax.vmap(one_batch)(q, k, v)

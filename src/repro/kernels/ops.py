@@ -1,0 +1,42 @@
+"""Jit'd public wrappers for the kernel library + quantization helpers."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv2d, conv1d, ref
+
+
+def quantize_fixed(x, bits: int, *, signed: bool = True):
+    """Clamp float/int data into a ``bits``-bit signed fixed-point range and
+    store it in the smallest integer container."""
+    lo = -(1 << (bits - 1)) if signed else 0
+    hi = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    q = jnp.clip(jnp.round(x), lo, hi)
+    return q.astype(conv2d.container_dtype(bits))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "data_bits",
+                                             "coeff_bits", "tile_h",
+                                             "interpret"))
+def conv_block(block, x, w, *, data_bits, coeff_bits, tile_h=16,
+               interpret=True):
+    return conv2d.conv_block(block, x, w, data_bits=data_bits,
+                             coeff_bits=coeff_bits, tile_h=tile_h,
+                             interpret=interpret)
+
+
+def conv_block_ref(block, x, w, **kw):
+    return ref.conv_block_ref(block, x, w, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def causal_conv1d(x, w, interpret=True):
+    return conv1d.causal_conv1d_pallas(x, w, interpret=interpret)
+
+
+def causal_conv1d_ref(x, w, conv_state=None):
+    return ref.causal_conv1d_ref(x, w, conv_state)

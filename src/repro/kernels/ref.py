@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (exact integer arithmetic)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv2d_3x3_ref(x, wk):
+    """'same' zero-padded 3×3 convolution (cross-correlation, matching the
+    kernels).  x: (H, W) any int dtype; wk: (3, 3).  Returns int32."""
+    h, w = x.shape
+    xpad = jnp.pad(x.astype(jnp.int32), ((1, 1), (1, 1)))
+    acc = jnp.zeros((h, w), jnp.int32)
+    for di in range(3):
+        for dj in range(3):
+            acc = acc + xpad[di:di + h, dj:dj + w] * \
+                wk[di, dj].astype(jnp.int32)
+    return acc
+
+
+def conv_block_ref(block: str, x, wk, **_):
+    """Oracle for ops.conv_block: conv1/conv2 -> (H,W); conv3/conv4 ->
+    (2,H,W) (both coefficient planes)."""
+    if block in ("conv1", "conv2"):
+        return conv2d_3x3_ref(x, wk)
+    return jnp.stack([conv2d_3x3_ref(x, wk[0]), conv2d_3x3_ref(x, wk[1])])
+
+
+def causal_conv1d_ref(x, w, conv_state=None):
+    """Depthwise causal conv (pre-activation).  x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    b, s, c = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((b, k - 1, c), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + s, :].astype(jnp.float32)
+            * w[i][None, None, :].astype(jnp.float32) for i in range(k))
+    return y

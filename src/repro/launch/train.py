@@ -1,0 +1,59 @@
+"""Training launcher.
+
+Examples:
+  # tiny end-to-end run on host devices (CPU container):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
+      --steps 50 --batch 8 --seq 128
+
+  # production lowering check for a full config (no execution):
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k --mesh single
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train.loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--opt-dtype", default="float32",
+                    choices=["float32", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+    tcfg = TrainConfig(
+        steps=args.steps, lr=args.lr, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, microbatches=args.microbatches,
+        opt=AdamWConfig(state_dtype=args.opt_dtype))
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+    _, _, history = train(model, data_cfg, tcfg)
+    if history:
+        print(f"[train] first loss {history[0]['loss']:.4f} → "
+              f"last loss {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

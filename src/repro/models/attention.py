@@ -1,0 +1,176 @@
+"""Attention: GQA with optional sliding window, logit softcaps and KV cache.
+
+Full-sequence attention is computed in query chunks (``lax.scan`` over chunk
+index with a rematerialized body) so the live logits tensor is
+O(B·H·chunk·T) instead of O(B·H·S·T) — the difference between fitting and
+not fitting the 32k-prefill cells in HBM.  Decode takes the direct path
+(a single query position).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, softcap, split_keys
+
+NEG_INF = -2.3819763e38  # most-negative bf16-representable
+
+
+def init_attention(key, cfg):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h, hd), cfg.jnp_dtype, fan_in=d),
+        "wk": dense_init(ks[1], (d, kh, hd), cfg.jnp_dtype, fan_in=d),
+        "wv": dense_init(ks[2], (d, kh, hd), cfg.jnp_dtype, fan_in=d),
+        "wo": dense_init(ks[3], (h, hd, d), cfg.jnp_dtype, fan_in=h * hd),
+    }
+
+
+def _attend(qc, k, v, row_pos, col_pos, *, causal, window, valid_len, cap,
+            scale, logits_dtype=jnp.float32):
+    """qc: (B,C,KH,G,Dh)  k,v: (B,T,KH,Dh)  row_pos: (C,)  col_pos: (T,)."""
+    logits = jnp.einsum("bckgd,btkd->bckgt", qc.astype(logits_dtype),
+                        k.astype(logits_dtype)).astype(jnp.float32) * scale
+    logits = softcap(logits, cap)
+    mask = jnp.ones((row_pos.shape[0], col_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= col_pos[None, :] <= row_pos[:, None]
+    if window is not None:
+        mask &= col_pos[None, :] > (row_pos[:, None] - window)
+    if valid_len is not None:
+        mask &= (col_pos < valid_len)[None, :]
+    logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bckgt,btkd->bckgd", probs.astype(logits_dtype),
+                     v.astype(logits_dtype))
+    return out.astype(v.dtype)
+
+
+def _maybe_batch_shard(x, enable: bool):
+    """§Perf: when q/kv heads don't divide the TP axis the attention math
+    is replicated across `model`; resharding the *batch* over
+    ('data','model') instead parallelizes it 16× at the cost of two
+    boundary reshards (see EXPERIMENTS.md §Perf)."""
+    if not enable:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(("data", "model"), *([None] * (x.ndim - 1)))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x   # no mesh context (single-device tests)
+
+
+def multi_head_attention(q, k, v, *, causal: bool,
+                         window: Optional[int] = None,
+                         cap: Optional[float] = None,
+                         q_offset=0,
+                         kv_valid_len=None,
+                         q_chunk: int = 1024,
+                         batch_shard: bool = False,
+                         logits_bf16: bool = False):
+    """q: (B,S,H,Dh); k,v: (B,T,KH,Dh) -> (B,S,H,Dh).
+
+    ``q_offset``: absolute position of q[0] (decode against a cache).
+    ``kv_valid_len``: scalar — mask cache positions >= it (decode).
+    """
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / (hd ** 0.5)
+    ldt = jnp.bfloat16 if logits_bf16 else jnp.float32
+    q = _maybe_batch_shard(q, batch_shard)
+    k = _maybe_batch_shard(k, batch_shard)
+    v = _maybe_batch_shard(v, batch_shard)
+    qg = q.reshape(b, s, kh, g, hd)
+    col_pos = jnp.arange(t)
+
+    if s == 1:  # decode: single query position, no chunking
+        row_pos = jnp.asarray(q_offset, jnp.int32).reshape(1)
+        out = _attend(qg, k, v, row_pos, col_pos, causal=causal,
+                      window=window, valid_len=kv_valid_len, cap=cap,
+                      scale=scale, logits_dtype=ldt)
+        return _maybe_batch_shard(out.reshape(b, s, h, hd), batch_shard)
+
+    n_chunks = max(1, -(-s // q_chunk))
+    while s % n_chunks:
+        n_chunks += 1
+    c = s // n_chunks
+    qc = jnp.moveaxis(qg.reshape(b, n_chunks, c, kh, g, hd), 1, 0)
+
+    @jax.checkpoint
+    def body(_, inputs):
+        qi, idx = inputs
+        row_pos = q_offset + idx * c + jnp.arange(c)
+        out = _attend(qi, k, v, row_pos, col_pos, causal=causal,
+                      window=window, valid_len=kv_valid_len, cap=cap,
+                      scale=scale, logits_dtype=ldt)
+        return None, out
+
+    _, out = jax.lax.scan(body, None, (qc, jnp.arange(n_chunks)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+    return _maybe_batch_shard(out, batch_shard)
+
+
+def attention_block(p, x, cfg, *, causal=True, window=None,
+                    positions=None, cache_kv=None, cache_pos=None,
+                    cross_kv=None, return_kv=False):
+    """One attention sublayer (projections + MHA), cache-aware.
+
+    Modes:
+      * full-sequence (train / prefill): ``cache_kv=None``; pass
+        ``return_kv=True`` to hand (k, v) to a new cache.
+      * decode: x is (B,1,D); ``cache_kv=(k_cache, v_cache)`` with absolute
+        write position ``cache_pos``; attends to cache[0:cache_pos+1].
+      * cross attention: ``cross_kv=(k, v)`` precomputed from the encoder.
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        start = 0 if cache_pos is None else cache_pos
+        positions = (start + jnp.arange(s))[None, :]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = multi_head_attention(q, k, v, causal=False,
+                                   cap=cfg.attn_softcap,
+                                   batch_shard=cfg.attn_batch_shard,
+                                   logits_bf16=cfg.attn_logits_bf16)
+        new_kv = None
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        vv = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if cache_kv is not None:
+            k_cache, v_cache = cache_kv
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, cache_pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, vv.astype(v_cache.dtype), (0, cache_pos, 0, 0))
+            out = multi_head_attention(
+                q, k_cache, v_cache, causal=False, window=window,
+                cap=cfg.attn_softcap, q_offset=cache_pos,
+                kv_valid_len=cache_pos + s,
+                batch_shard=cfg.attn_batch_shard,
+                logits_bf16=cfg.attn_logits_bf16)
+            new_kv = (k_cache, v_cache)
+        else:
+            out = multi_head_attention(q, k, vv, causal=causal,
+                                       window=window, cap=cfg.attn_softcap,
+                                       batch_shard=cfg.attn_batch_shard,
+                                       logits_bf16=cfg.attn_logits_bf16)
+            new_kv = (k, vv) if return_kv else None
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_kv
+
+
+def init_cross_kv(p, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v

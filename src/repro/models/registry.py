@@ -1,0 +1,84 @@
+"""Model facade: one object per architecture, plus dry-run input specs.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input of a given (arch × shape) cell — weak-type-correct, shardable, and
+never allocated.  The modality frontends are stubs per the assignment:
+``patches`` / ``frames`` arrive as precomputed embeddings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---- param / cache construction ----------------------------------
+    def init(self, key):
+        return tf.init_params(key, self.cfg)
+
+    def init_abstract(self, key=None):
+        """Shape-only params (no allocation) for dry-run lowering."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: tf.init_params(k, self.cfg), key)
+
+    def init_cache(self, batch: int, max_len: int):
+        enc_len = self.cfg.frontend_len if self.cfg.enc_dec else 0
+        return tf.init_cache(self.cfg, batch, max_len, enc_len=enc_len)
+
+    def cache_abstract(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    # ---- forwards ------------------------------------------------------
+    def forward_train(self, params, batch):
+        return tf.forward_train(params, batch, self.cfg)
+
+    def prefill(self, params, batch):
+        return tf.prefill(params, batch, self.cfg)
+
+    def decode_step(self, params, cache, token, pos):
+        return tf.decode_step(params, cache, token, pos, self.cfg)
+
+    # ---- dry-run input specs -------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = cfg.jnp_dtype
+        sds = jax.ShapeDtypeStruct
+
+        def token_batch(n_tok):
+            batch = {"tokens": sds((b, n_tok), i32)}
+            if cfg.frontend == "vision":
+                batch["patches"] = sds((b, cfg.frontend_len, cfg.d_model), dt)
+            if cfg.enc_dec:
+                batch["frames"] = sds((b, cfg.frontend_len, cfg.d_model), dt)
+            return batch
+
+        if shape.kind == "train":
+            n_tok = s - (cfg.frontend_len if cfg.frontend == "vision" else 0)
+            batch = token_batch(n_tok)
+            batch["labels"] = sds((b, n_tok), i32)
+            return {"batch": batch}
+        if shape.kind == "prefill":
+            n_tok = s - (cfg.frontend_len if cfg.frontend == "vision" else 0)
+            return {"batch": token_batch(n_tok)}
+        # decode: one new token against a cache of length s
+        cache = jax.tree.map(
+            lambda x: sds(x.shape, x.dtype), self.cache_abstract(b, s))
+        return {"cache": cache,
+                "token": sds((b, 1), i32),
+                "pos": sds((), i32)}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

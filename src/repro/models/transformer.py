@@ -1,0 +1,322 @@
+"""Unified decoder LM (+ optional encoder for Whisper).
+
+The layer stack is a ``lax.scan`` over stacked *cycles* (the repeating
+sublayer pattern from the config), so trace/compile time is O(cycle), not
+O(depth) — essential for compiling the 72-layer Jamba config against a
+512-device mesh in reasonable time.  Every sublayer is rematerialized
+(``jax.checkpoint``), the standard activation policy at these scales.
+
+Cache layout (decode): a pytree whose leaves carry a leading ``n_cycles``
+dimension, scanned alongside the stacked parameters.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL_ATTN, MAMBA, DENSE, MOE, NONE
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, embed_init, init_mlp, mlp,
+                                 rms_norm, softcap, split_keys)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg, sub, *, cross: bool):
+    ks = split_keys(key, 5)
+    p = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if sub.mixer in (ATTN, LOCAL_ATTN):
+        p["attn"] = attn_mod.init_attention(ks[0], cfg)
+    elif sub.mixer == MAMBA:
+        p["mamba"] = ssm_mod.init_mamba(ks[0], cfg)
+    if cross:
+        p["ln_x"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["cross"] = attn_mod.init_attention(ks[1], cfg)
+    if sub.mlp != NONE:
+        p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if sub.mlp == DENSE:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_gated,
+                                cfg.jnp_dtype)
+        else:
+            p["moe"] = moe_mod.init_moe(ks[3], cfg)
+    return p
+
+
+def _init_cycle(key, cfg, *, cross: bool):
+    ks = split_keys(key, len(cfg.layer_cycle))
+    return {f"s{j}": _init_sublayer(ks[j], cfg, sub, cross=cross)
+            for j, sub in enumerate(cfg.layer_cycle)}
+
+
+def init_params(key, cfg):
+    ks = split_keys(key, 6)
+    dt = cfg.jnp_dtype
+    params = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "stack": jax.vmap(
+            lambda k: _init_cycle(k, cfg, cross=cfg.enc_dec))(
+                jnp.stack(split_keys(ks[1], cfg.n_cycles))),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            ks[2], (cfg.d_model, cfg.vocab_size), dt, fan_in=cfg.d_model)
+    if cfg.enc_dec:
+        enc_cfg = cfg  # same width
+        enc_cycle = lambda k: {  # encoder: full bidirectional attn + MLP
+            "s0": {
+                "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                "attn": attn_mod.init_attention(jax.random.fold_in(k, 1),
+                                                enc_cfg),
+                "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+                "mlp": init_mlp(jax.random.fold_in(k, 2), cfg.d_model,
+                                cfg.d_ff, cfg.mlp_gated, dt),
+            }}
+        params["enc_stack"] = jax.vmap(enc_cycle)(
+            jnp.stack(split_keys(ks[3], cfg.n_enc_layers)))
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int = 0):
+    """Zero-initialized decode cache (leaves lead with n_cycles)."""
+    dt = cfg.jnp_dtype
+    per_cycle = {}
+    for j, sub in enumerate(cfg.layer_cycle):
+        if sub.mixer in (ATTN, LOCAL_ATTN):
+            kv = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            entry = {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)}
+        elif sub.mixer == MAMBA:
+            entry = ssm_mod.init_mamba_cache(cfg, batch)
+        else:
+            entry = {}
+        if cfg.enc_dec:
+            ckv = (batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+            entry["ck"] = jnp.zeros(ckv, dt)
+            entry["cv"] = jnp.zeros(ckv, dt)
+        per_cycle[f"s{j}"] = entry
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_cycles,) + x.shape),
+        per_cycle)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _run_sublayer(p, x, cfg, sub, *, mode, cache, cache_pos, enc_out):
+    """mode: 'train' | 'prefill' | 'decode'."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    window = cfg.sliding_window if sub.mixer == LOCAL_ATTN else None
+
+    if sub.mixer in (ATTN, LOCAL_ATTN):
+        if mode == "train":
+            y, _ = attn_mod.attention_block(p["attn"], h, cfg, causal=True,
+                                            window=window)
+        elif mode == "prefill":
+            y, kv = attn_mod.attention_block(p["attn"], h, cfg, causal=True,
+                                             window=window, return_kv=True)
+            new_cache["k"], new_cache["v"] = kv
+        else:  # decode
+            y, kv = attn_mod.attention_block(
+                p["attn"], h, cfg, window=window,
+                cache_kv=(cache["k"], cache["v"]), cache_pos=cache_pos)
+            new_cache["k"], new_cache["v"] = kv
+        x = x + y
+    elif sub.mixer == MAMBA:
+        mcache = None
+        if mode != "train":
+            mcache = ({k: cache[k] for k in
+                       ("conv_x", "conv_B", "conv_C", "ssm")}
+                      if mode == "decode" else ssm_mod.init_mamba_cache(
+                          cfg, x.shape[0]))
+        y, mc = ssm_mod.mamba_block(p["mamba"], h, cfg, cache=mcache)
+        if mc is not None:
+            new_cache.update(mc)
+        x = x + y
+
+    if cfg.enc_dec and "cross" in p:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if mode == "decode":
+            ckv = (cache["ck"], cache["cv"])
+        else:
+            ckv = attn_mod.init_cross_kv(p["cross"], enc_out, cfg)
+            if mode == "prefill":
+                new_cache["ck"], new_cache["cv"] = ckv
+        y, _ = attn_mod.attention_block(p["cross"], h, cfg, cross_kv=ckv)
+        x = x + y
+
+    if cfg.remat_policy == "save_mixer_out":
+        from jax.ad_checkpoint import checkpoint_name
+        x = checkpoint_name(x, "mixer_out")
+
+    if sub.mlp != NONE:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if sub.mlp == DENSE:
+            y = mlp(p["mlp"], h, cfg.act)
+        else:
+            y, aux = moe_mod.moe_layer(p["moe"], h, cfg)
+        x = x + y
+        if cfg.remat_policy == "save_mixer_out":
+            from jax.ad_checkpoint import checkpoint_name
+            x = checkpoint_name(x, "mlp_out")
+    return x, new_cache, aux
+
+
+def _run_stack(params, x, cfg, *, mode, cache=None, cache_pos=None,
+               enc_out=None):
+    """Scan the cycle stack.  Returns (x, new_cache, aux_sum)."""
+
+    def cycle_body(carry, scanned):
+        xc, aux_acc = carry
+        cyc_params, cyc_cache = scanned
+        new_cyc_cache = {} if cyc_cache is not None else None
+        policy = None
+        if cfg.remat_policy == "save_mixer_out":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "mlp_out")
+        for j, sub in enumerate(cfg.layer_cycle):
+            sub_cache = None if cyc_cache is None else cyc_cache[f"s{j}"]
+            fn = functools.partial(_run_sublayer, cfg=cfg, sub=sub,
+                                   mode=mode, cache_pos=cache_pos,
+                                   enc_out=enc_out)
+            fn = jax.checkpoint(
+                lambda p_, x_, c_, fn=fn: fn(p_, x_, cache=c_),
+                policy=policy)
+            xc, nc, aux = fn(cyc_params[f"s{j}"], xc, sub_cache)
+            if new_cyc_cache is not None:
+                new_cyc_cache[f"s{j}"] = nc
+        return (xc, aux_acc + aux), new_cyc_cache
+
+    if cache is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: cycle_body(c, (p, None)),
+            (x, jnp.zeros((), jnp.float32)), params["stack"])
+        return x, None, aux
+    (x, aux), new_cache = jax.lax.scan(
+        cycle_body, (x, jnp.zeros((), jnp.float32)),
+        (params["stack"], cache))
+    return x, new_cache, aux
+
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _logits(params, x, cfg):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["unembed"]
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def _encode(params, frames, cfg):
+    """Whisper encoder over stub frame embeddings (B, F, D)."""
+    pos = jnp.arange(frames.shape[1])
+    d = cfg.d_model
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, jnp.float32) / d))
+    ang = pos[:, None].astype(jnp.float32) * inv[None, :]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    x = frames + pe[None].astype(frames.dtype)
+
+    def body(xc, cyc):
+        p = cyc["s0"]
+        h = rms_norm(xc, p["ln1"], cfg.norm_eps)
+        y, _ = attn_mod.attention_block(p["attn"], h, cfg, causal=False)
+        xc = xc + y
+        h = rms_norm(xc, p["ln2"], cfg.norm_eps)
+        xc = xc + mlp(p["mlp"], h, cfg.act)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _prepend_frontend(x, batch_extras, cfg):
+    """VLM: prepend stub patch embeddings to the token stream."""
+    if cfg.frontend == "vision" and "patches" in batch_extras:
+        x = jnp.concatenate(
+            [batch_extras["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params, batch, cfg):
+    """batch: tokens (B,S), labels (B,S), [patches (B,P,D) | frames (B,F,D)]
+    Returns (loss, metrics dict)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = _embed(params, tokens, cfg)
+    n_front = 0
+    enc_out = None
+    if cfg.frontend == "vision":
+        n_front = batch["patches"].shape[1]
+        x = _prepend_frontend(x, batch, cfg)
+    if cfg.enc_dec:
+        enc_out = _encode(params, batch["frames"], cfg)
+    x, _, aux = _run_stack(params, x, cfg, mode="train", enc_out=enc_out)
+    if n_front:
+        x = x[:, n_front:]
+    logits = _logits(params, x, cfg)
+
+    valid = (labels >= 0)
+    labels_c = jnp.clip(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll) / denom + aux
+    metrics = {"nll": jnp.sum(nll) / denom, "aux": aux,
+               "tokens": jnp.sum(valid)}
+    return loss, metrics
+
+
+def prefill(params, batch, cfg):
+    """Full-sequence prefill.  Returns (last-position logits (B,V), cache)."""
+    tokens = batch["tokens"]
+    x = _embed(params, tokens, cfg)
+    n_front = 0
+    enc_out = None
+    if cfg.frontend == "vision":
+        n_front = batch["patches"].shape[1]
+        x = _prepend_frontend(x, batch, cfg)
+    if cfg.enc_dec:
+        enc_out = _encode(params, batch["frames"], cfg)
+    cache = init_cache(cfg, tokens.shape[0], x.shape[1],
+                       enc_len=0 if enc_out is None else enc_out.shape[1])
+    x, cache, _ = _run_stack(params, x, cfg, mode="prefill", cache=cache,
+                             enc_out=enc_out)
+    logits = _logits(params, x[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    """One decode step.  token: (B,1) int32; pos: scalar int32 (write slot).
+    Returns (logits (B,V), new_cache)."""
+    x = _embed(params, token, cfg)
+    x, cache, _ = _run_stack(params, x, cfg, mode="decode", cache=cache,
+                             cache_pos=pos)
+    logits = _logits(params, x, cfg)
+    return logits[:, 0], cache

@@ -1,0 +1,28 @@
+"""Gradient compression: block-wise int8 round-trip ahead of the DP
+all-reduce.
+
+Under GSPMD the data-parallel gradient reduction is inserted by the
+compiler, so "compressed all-reduce" is expressed as quantize → dequantize
+around the point where the reduction happens: XLA reduces the
+dequantized-but-8-bit-grained values.  The codec is shared with the 8-bit
+optimizer (optim/adamw.py).  The explicit shard_map variant that reduces
+raw int8 over the wire lives in parallel/collectives.py (§Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import dequantize_state, quantize_state
+
+
+def compress_grads_int8(grads):
+    return jax.tree.map(quantize_state, grads,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+
+def decompress_grads(q, like):
+    return jax.tree.map(
+        lambda qq, g: dequantize_state(qq, g.shape).astype(g.dtype),
+        q, like, is_leaf=lambda x: isinstance(x, dict) and "codes" in x)

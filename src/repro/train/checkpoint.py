@@ -1,0 +1,126 @@
+"""Mesh-agnostic, atomic, fault-tolerant checkpointing.
+
+Design (for 1000+-node deployments):
+  * leaves are written per-file under a step directory, with a JSON
+    manifest (tree structure, shapes, dtypes, step, config digest);
+  * writes go to ``<step>.tmp`` then ``os.rename`` → a crash mid-write can
+    never corrupt the latest checkpoint (restore only sees committed dirs);
+  * arrays are saved *unsharded* (gathered), so restore works on ANY mesh
+    or device count — this is what makes elastic rescaling after a node
+    failure a restore, not a reshard job;
+  * ``keep`` bounds disk usage; restore picks the newest committed step.
+
+On a real multi-host deployment the per-leaf writes become
+process-local-shard writes with the same manifest/rename protocol (each
+host writes its addressable shards); the protocol here is the same code
+path jax.Array makes multi-host-safe via ``jax.device_get`` on fully
+replicated/gathered arrays.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, Any]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"model {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, state: Dict[str, Any],
+             metadata: Optional[Dict] = None):
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(state)
+        manifest = {"step": step, "leaves": {}, "metadata": metadata or {}}
+        for key, leaf in flat.items():
+            arr = jax.device_get(leaf)
+            orig_dtype = str(arr.dtype)
+            if orig_dtype not in ("float32", "float64", "int32", "int64",
+                                  "int8", "uint8", "int16", "uint16",
+                                  "uint32", "uint64", "bool"):
+                # bfloat16 & friends: store losslessly as float32
+                arr = np.asarray(arr, np.float32)
+            else:
+                arr = np.asarray(arr)
+            fname = hashlib.sha1(key.encode()).hexdigest()[:16] + ".npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": orig_dtype}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic commit
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None
+                ) -> Tuple[int, Any]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {}
+        for key, info in manifest["leaves"].items():
+            flat[key] = np.load(d / info["file"])
+        return step, _unflatten_like(template, flat)

@@ -1,0 +1,82 @@
+"""Train / serve step builders (jit-able, mesh-agnostic pure functions)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_update
+from repro.parallel.compress import compress_grads_int8, decompress_grads
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, lr: float = 3e-4,
+                    microbatches: int = 1, grad_compression: bool = False):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` accumulates gradients over a ``lax.scan`` of
+    microbatch slices — activation memory drops by the factor, and XLA
+    overlaps each microbatch's gradient all-reduce with the next
+    microbatch's compute.
+    ``grad_compression`` rounds gradients through the int8 block codec
+    before the (GSPMD-inserted) data-parallel reduction.
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.forward_train(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        def slice_mb(i, x):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc, = carry
+            mb_batch = jax.tree.map(functools.partial(slice_mb, i), batch)
+            loss, metrics, grads = single(params, mb_batch)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc,), (loss, metrics)
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc,), (losses, metricses) = jax.lax.scan(
+            body, (zeros,), jnp.arange(microbatches))
+        grads = jax.tree.map(lambda g: g / microbatches, acc)
+        loss = jnp.mean(losses)
+        metrics = jax.tree.map(jnp.mean, metricses)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, step_idx=None):
+        if microbatches > 1:
+            loss, metrics, grads = accumulate(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        if grad_compression:
+            grads = decompress_grads(compress_grads_int8(grads), grads)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, lr, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_serve_steps(model):
+    """Returns (prefill_fn, decode_fn) suitable for jit."""
+
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch)
+
+    def decode_fn(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,37 @@
+"""CNN-on-conv-blocks: allocator-driven block selection + exact inference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cnn import (CNNConfig, ConvLayerSpec, choose_blocks,
+                            cnn_forward, cnn_forward_ref, init_cnn)
+from repro.kernels import ops
+
+
+def _cfg():
+    return CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6),
+        ConvLayerSpec(4, 4, data_bits=8, coeff_bits=6),
+        ConvLayerSpec(4, 2, data_bits=6, coeff_bits=6),
+    ), img_h=16, img_w=128)
+
+
+def test_allocator_chooses_blocks():
+    cfg = _cfg()
+    blocks = choose_blocks(cfg)
+    assert len(blocks) == 3
+    assert all(b in ("conv1", "conv2", "conv3", "conv4") for b in blocks)
+
+
+def test_cnn_blocks_match_reference():
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    x = ops.quantize_fixed(
+        jnp.asarray(rng.integers(0, 100, (16, 128, 1)), jnp.float32), 8)
+    for blocks in (["conv1", "conv2", "conv4"], choose_blocks(cfg)):
+        y = cnn_forward(params, x, cfg, blocks)
+        yr = cnn_forward_ref(params, x, cfg)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+        assert y.shape == (16, 128, 2)

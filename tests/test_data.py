@@ -1,0 +1,56 @@
+"""Data pipeline: determinism (the restart contract), masking, prefetch."""
+
+import numpy as np
+
+from repro.data import DataConfig, make_pipeline
+from repro.data.pipeline import batch_at
+
+
+def _cfg(**kw):
+    return DataConfig(vocab_size=997, seq_len=64, global_batch=4, **kw)
+
+
+def test_batch_deterministic_in_step():
+    cfg = _cfg()
+    a = batch_at(cfg, 17)
+    b = batch_at(cfg, 17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_steps_differ():
+    cfg = _cfg()
+    a = batch_at(cfg, 1)
+    b = batch_at(cfg, 2)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_tokens_in_range_and_labels_masked():
+    cfg = _cfg()
+    b = batch_at(cfg, 3)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < cfg.vocab_size
+    assert (b["labels"] == -100).sum() >= cfg.global_batch  # ≥1 per row
+
+
+def test_learnable_structure_exists():
+    """The synthetic stream injects bigram structure (even→odd position);
+    verify the deterministic mapping holds where labels are unmasked."""
+    cfg = _cfg()
+    b = batch_at(cfg, 5)
+    toks = b["tokens"]
+    pred = (toks[:, 0::2] * 7 + 13) % cfg.vocab_size
+    got = toks[:, 1::2]
+    match = (pred[:, : got.shape[1]] == got).mean()
+    assert match > 0.95
+
+
+def test_pipeline_prefetch_resume():
+    cfg = _cfg()
+    it = make_pipeline(cfg, start_step=7)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"],
+                                  batch_at(cfg, 7)["tokens"])
+    second = next(it)
+    np.testing.assert_array_equal(second["tokens"],
+                                  batch_at(cfg, 8)["tokens"])

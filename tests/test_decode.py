@@ -1,0 +1,76 @@
+"""Decode == prefill consistency across model families (KV cache, SSM
+state, cross-attention, VLM prefix)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import build_model
+
+FAMILIES = ["llama3.2-3b", "gemma2-2b", "granite-20b", "mamba2-1.3b",
+            "jamba-1.5-large-398b", "qwen3-moe-30b-a3b", "whisper-medium",
+            "pixtral-12b"]
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_prefill(arch):
+    cfg = smoke_config(arch).with_overrides(dtype="float32")
+    if cfg.moe is not None:  # avoid capacity-drop divergence (see test_moe)
+        cfg = cfg.with_overrides(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    n_front = 0
+    if cfg.enc_dec:
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(4), (B, cfg.frontend_len, cfg.d_model),
+            cfg.jnp_dtype)
+    if cfg.frontend == "vision":
+        batch["patches"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(5), (B, cfg.frontend_len, cfg.d_model),
+            cfg.jnp_dtype)
+        n_front = cfg.frontend_len
+
+    logits_full, _ = jax.jit(model.prefill)(params, batch)
+
+    short = dict(batch)
+    short["tokens"] = toks[:, :S - 1]
+    _, cache = jax.jit(model.prefill)(params, short)
+    # grow attention caches by one slot for the decode write
+    cache = jax.tree.map(
+        lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))
+        if x.ndim == 5 and x.shape[2] == S - 1 + n_front else x, cache)
+    pos = S - 1 + n_front
+    logits_dec, _ = jax.jit(model.decode_step)(
+        params, cache, toks[:, S - 1:S], jnp.int32(pos))
+
+    err = float(jnp.max(jnp.abs(logits_full - logits_dec)))
+    assert err < 2e-3, f"{arch}: decode/prefill mismatch {err}"
+
+
+def test_multi_step_decode_consistency():
+    """Decoding 3 tokens step-by-step == prefill over the longer prompt."""
+    cfg = smoke_config("llama3.2-3b").with_overrides(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    _, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :S - 3]})
+    cache = jax.tree.map(
+        lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, 3), (0, 0), (0, 0)))
+        if x.ndim == 5 else x, cache)
+    decode = jax.jit(model.decode_step)
+    for i in range(3):
+        logits, cache = decode(params, cache, toks[:, S - 3 + i:S - 2 + i],
+                               jnp.int32(S - 3 + i))
+    logits_full, _ = jax.jit(model.prefill)(params, {"tokens": toks})
+    err = float(jnp.max(jnp.abs(logits_full - logits)))
+    assert err < 2e-3, err

@@ -1,0 +1,101 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and finiteness (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.models import build_model
+
+ARCHS = [a for a in list_archs()]
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.frontend == "vision":
+        batch["patches"] = 0.05 * jax.random.normal(
+            jax.random.PRNGKey(1), (b, cfg.frontend_len, cfg.d_model),
+            cfg.jnp_dtype)
+    if cfg.enc_dec:
+        batch["frames"] = 0.05 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.frontend_len, cfg.d_model),
+            cfg.jnp_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(model.forward_train)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss {loss}"
+    assert float(metrics["nll"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_grad_finite(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    grads = jax.grad(lambda p: model.forward_train(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    for g in leaves:
+        assert bool(jnp.all(jnp.isfinite(g))), f"{arch}: non-finite grad"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_shapes(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    del batch["labels"]
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.leaves(cache), f"{arch}: empty cache"
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters (spot checks)."""
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads) == \
+        (48, 2048, 32, 4)
+    assert q.moe.num_experts == 128 and q.moe.top_k == 8
+    assert q.vocab_size == 151936
+
+    g = get_config("granite-20b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads) == \
+        (52, 6144, 48, 1)
+
+    j = get_config("jamba-1.5-large-398b")
+    assert j.n_layers == 72 and j.moe.num_experts == 16
+    # 1:7 attention:mamba ratio in the cycle
+    kinds = [s.mixer for s in j.layer_cycle]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+
+    m = get_config("mamba2-1.3b")
+    assert m.ssm.state_dim == 128 and m.n_heads == 0
+
+    for name in ("gemma2-9b", "gemma2-2b"):
+        g2 = get_config(name)
+        assert g2.attn_softcap == 50.0 and g2.final_softcap == 30.0
+        assert [s.mixer for s in g2.layer_cycle] == ["local", "attn"]
+
+
+def test_param_counts_near_names():
+    expect = {"qwen3-moe-30b-a3b": 30e9, "llama4-maverick-400b-a17b": 400e9,
+              "pixtral-12b": 12e9, "granite-20b": 20e9, "gemma2-9b": 9e9,
+              "llama3.2-3b": 3.2e9, "gemma2-2b": 2.6e9,
+              "jamba-1.5-large-398b": 398e9, "mamba2-1.3b": 1.3e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.7 * n < got < 1.45 * n, (arch, got, n)

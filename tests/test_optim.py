@@ -1,0 +1,78 @@
+"""AdamW (+8-bit states), schedules, gradient compression codec."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import dequantize_state, quantize_state
+from repro.optim.schedule import cosine_schedule
+
+
+def _optimize_quadratic(state_dtype, steps=60):
+    cfg = AdamWConfig(weight_decay=0.0, state_dtype=state_dtype)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((4, 8), jnp.float32)}
+    opt = adamw_init(params, cfg)
+    for _ in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw_update(grads, opt, params, 0.05, cfg)
+    return float(jnp.mean((params["w"] - target) ** 2))
+
+
+def test_adamw_converges_fp32():
+    assert _optimize_quadratic("float32") < 1e-2
+
+
+def test_adamw_converges_int8():
+    assert _optimize_quadratic("int8") < 5e-2
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-4, 1e3))
+def test_int8_codec_roundtrip(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(300,)) * scale, jnp.float32)
+    q = quantize_state(x)
+    back = dequantize_state(q, x.shape)
+    # block-wise 8-bit: error bounded by blockmax/127
+    err = np.abs(np.asarray(back - x))
+    bound = np.asarray(jnp.max(jnp.abs(x))) / 127 + 1e-9
+    assert err.max() <= bound * 1.01
+
+
+def test_grad_clip_applied():
+    cfg = AdamWConfig(grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    opt = adamw_init(params, cfg)
+    huge = {"w": jnp.full((8,), 1e6, jnp.float32)}
+    p1, _, m = adamw_update(huge, opt, params, 0.1, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert bool(jnp.all(jnp.isfinite(p1["w"])))
+    assert float(jnp.max(jnp.abs(p1["w"]))) < 1.0   # step bounded by lr scale
+
+
+def test_cosine_schedule_shape():
+    lr0 = cosine_schedule(0, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    lr10 = cosine_schedule(10, peak_lr=1.0, warmup_steps=10,
+                           total_steps=100)
+    lr100 = cosine_schedule(100, peak_lr=1.0, warmup_steps=10,
+                            total_steps=100)
+    assert float(lr0) == 0.0
+    assert float(lr10) == pytest.approx(1.0)
+    assert float(lr100) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_grad_compression_roundtrip():
+    from repro.parallel.compress import (compress_grads_int8,
+                                         decompress_grads)
+    g = {"a": jnp.asarray(np.random.default_rng(1).normal(size=(64, 3)),
+                          jnp.float32)}
+    q = compress_grads_int8(g)
+    back = decompress_grads(q, g)
+    err = float(jnp.max(jnp.abs(back["a"] - g["a"])))
+    assert err <= float(jnp.max(jnp.abs(g["a"]))) / 127 * 1.01

@@ -1,0 +1,82 @@
+"""Property tests for the Algorithm-1 machinery (hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import polyfit
+
+GRID_D, GRID_C = np.meshgrid(np.arange(3, 17, dtype=float),
+                             np.arange(3, 17, dtype=float))
+D, C = GRID_D.ravel(), GRID_C.ravel()
+
+coef = st.floats(min_value=-50, max_value=50, allow_nan=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=coef, b=coef, c=coef)
+def test_fit_recovers_linear(a, b, c):
+    y = a + b * D + c * C
+    m = polyfit.algorithm1(D, C, y)
+    assert m.r2 > 0.999
+    np.testing.assert_allclose(m.predict(D, C), y, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(a=coef, b=coef, q=st.floats(0.1, 5.0))
+def test_fit_recovers_quadratic(a, b, q):
+    y = a + b * D + q * D * C
+    # the direct degree-2 fit is exact
+    m2 = polyfit.fit_poly(D, C, y, 2)
+    assert m2.r2 > 0.999
+    # Algorithm 1 keeps the LOWEST R² above the 0.9 gate (paper pseudocode)
+    # so it may legitimately return a coarser model — but never below gate
+    m = polyfit.algorithm1(D, C, y)
+    assert m.r2 >= 0.9
+
+
+def test_prefers_lowest_r2_above_gate():
+    """Paper Algorithm 1 keeps the SMALLEST R² that still clears 0.9."""
+    rng = np.random.default_rng(0)
+    y = 3 + 2 * D + 0.5 * C + rng.normal(0, 1.0, D.shape)
+    m = polyfit.algorithm1(D, C, y)
+    assert m.r2 >= 0.9
+    # a degree-4 fit has strictly higher R²; Algorithm 1 must not pick it
+    m4 = polyfit.fit_poly(D, C, y, 4)
+    assert m.r2 <= m4.r2 + 1e-12
+
+
+def test_pruning_drops_noise_terms():
+    y = 5 + 3 * D            # c is irrelevant
+    m = polyfit.fit_poly(D, C, y, 2)
+    pruned = polyfit.prune_insignificant(m, D, C, y)
+    # pruned model keeps accuracy
+    assert polyfit.r_squared(y, pruned.predict(D, C)) > 0.999
+    assert len(pruned.terms) <= len(m.terms)
+
+
+def test_segmented_exact_on_regime_split():
+    y = np.where(D + C <= 12, 10 + D, 1000 + 5 * C)
+    m = polyfit.fit_segmented(D, C, y, scheme="pack")
+    np.testing.assert_allclose(m.predict(D, C), y, rtol=1e-6, atol=1e-4)
+    assert m.r2 > 0.9999
+
+
+def test_error_metrics_properties():
+    y = np.array([1.0, 2.0, 4.0])
+    met = polyfit.error_metrics(y, y)
+    assert met["mse"] == 0 and met["mae"] == 0
+    assert met["r2"] == 1.0 and met["mape_pct"] == 0
+    met2 = polyfit.error_metrics(y, y + 1)
+    assert met2["mse"] == 1.0 and met2["mae"] == 1.0
+    assert met2["r2"] < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_r2_bounded_above(seed):
+    rng = np.random.default_rng(seed)
+    y = rng.normal(size=D.shape)
+    for deg in (1, 2, 3, 4):
+        m = polyfit.fit_poly(D, C, y, deg)
+        assert m.r2 <= 1.0 + 1e-9

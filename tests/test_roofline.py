@@ -1,0 +1,49 @@
+"""Roofline + model-DSE over the dry-run corpus (skips if absent)."""
+
+import glob
+import json
+
+import pytest
+
+from repro.core.model_dse import analytic_features, fit_dse, load_corpus
+from repro.core.roofline import model_flops, roofline_terms
+
+
+def _corpus():
+    return load_corpus("results", "baseline")
+
+
+def test_model_flops_formulas():
+    r = {"arch": "x", "shape": "train_4k", "active_params": 1e9}
+    assert model_flops(r) == 6e9 * 4096 * 256
+    r2 = {"arch": "x", "shape": "decode_32k", "active_params": 1e9}
+    assert model_flops(r2) == 2e9 * 128
+
+
+def test_analytic_features_positive():
+    f = analytic_features("qwen3-moe-30b-a3b", "train_4k", 256, "single")
+    assert f["x_flops"] > 0 and f["x_mem"] > 0 and f["x_coll"] > 0
+
+
+@pytest.mark.skipif(not glob.glob("results/baseline__*.json"),
+                    reason="dry-run corpus not generated yet")
+def test_roofline_terms_valid_on_corpus():
+    rows = _corpus()
+    assert rows, "corpus empty"
+    for r in rows:
+        t = roofline_terms(r)
+        assert t["compute_s"] > 0
+        assert t["memory_s"] > 0
+        assert 0 < t["roofline_fraction"] <= 1.0001, \
+            (r["arch"], r["shape"], t)
+        assert t["dominant"] in ("compute_s", "memory_s", "collective_s")
+
+
+@pytest.mark.skipif(len(glob.glob("results/baseline__*.json")) < 20,
+                    reason="corpus too small")
+def test_dse_predicts_order_of_magnitude():
+    rows = _corpus()
+    dse = fit_dse(rows)
+    # LOO log10 MAE below 0.5 → predictions within ~3× across 6 orders of
+    # magnitude of cell sizes; flops should be much tighter
+    assert dse.loo["flops"]["log_mae"] < 0.5, dse.loo
