@@ -13,23 +13,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cnn import (CNNConfig, ConvLayerSpec, choose_blocks,
-                            cnn_forward, cnn_forward_ref, init_cnn)
+from repro.core.cnn import (choose_blocks, cnn_forward, cnn_forward_ref,
+                            init_cnn, quickstart_cnn_config)
 from repro.kernels import ops
 
 
 def main():
-    cfg = CNNConfig(layers=(
-        ConvLayerSpec(1, 8, data_bits=8, coeff_bits=6),
-        ConvLayerSpec(8, 8, data_bits=8, coeff_bits=6),
-        ConvLayerSpec(8, 4, data_bits=6, coeff_bits=4),
-    ), img_h=32, img_w=128)
+    cfg = quickstart_cnn_config()
 
-    blocks = choose_blocks(cfg)
+    blocks = choose_blocks(cfg)          # List[ConvBlock] from the registry
     print("model-driven block selection (paper §4.2):")
-    for i, (spec, b) in enumerate(zip(cfg.layers, blocks)):
+    for i, (spec, blk) in enumerate(zip(cfg.layers, blocks)):
         print(f"  layer {i}: {spec.in_channels}→{spec.out_channels}ch "
-              f"d={spec.data_bits} c={spec.coeff_bits} → {b}")
+              f"d={spec.data_bits} c={spec.coeff_bits} → {blk.name} "
+              f"({blk.convs_per_step} convs/step)")
 
     params = init_cnn(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)

@@ -1,0 +1,24 @@
+"""``repro.blocks`` — the convolution-block library as a first-class API.
+
+    from repro.blocks import get_block, list_blocks, register_block
+
+    blk = get_block("conv3")
+    y = blk.apply(x2d, w2, data_bits=8, coeff_bits=4)       # one plane
+    acc = blk.apply_batched(x_hwc, w_oihw, data_bits=8, coeff_bits=4)
+
+Importing the package registers the paper's four blocks (conv1..conv4).
+See docs/blocks.md for the API reference and a custom-block example.
+"""
+
+from repro.blocks.base import BIT_RANGE, ConvBlock
+from repro.blocks.paper import (CONV1, CONV2, CONV3, CONV4, Conv1Block,
+                                Conv2Block, Conv3Block, Conv4Block)
+from repro.blocks.registry import (BlockLike, get_block, list_blocks,
+                                   register_block, unregister_block)
+
+__all__ = [
+    "BIT_RANGE", "BlockLike", "ConvBlock",
+    "CONV1", "CONV2", "CONV3", "CONV4",
+    "Conv1Block", "Conv2Block", "Conv3Block", "Conv4Block",
+    "get_block", "list_blocks", "register_block", "unregister_block",
+]

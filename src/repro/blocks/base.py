@@ -1,0 +1,179 @@
+"""Abstract ``ConvBlock``: the paper's parameterizable convolution block
+as a first-class object.
+
+The seed code represented a block as a bare string ("conv1".."conv4")
+threaded through kernels, synthesis, allocation and the CNN, with every
+module re-deriving block properties (dual output, packing validity,
+weight shape) on its own.  ``ConvBlock`` centralizes that metadata and
+behavior:
+
+  metadata   ``name``, ``convs_per_step``, ``dual_output``,
+             ``weight_shape(coeff_bits)``, ``supports(d, c)``,
+             ``packed_ok(d, c)``
+  execution  ``apply``       — one (H, W) plane through the Pallas kernel
+             ``reference``   — pure-jnp oracle (exact integer math)
+             ``apply_batched`` — ALL (out_ch, in_ch) planes of a CNN
+             layer in one jitted/vmapped kernel call
+
+``apply_batched`` is the performance half of the redesign: the seed CNN
+forward dispatched one Python-level kernel call per (out_ch, in_ch)
+plane — O(out_ch·in_ch) dispatches per layer.  Here the plane loop is a
+nested ``jax.vmap`` over a single ``pallas_call``, so a whole layer is
+one compiled executable.  Dual-output blocks keep their
+2-convolutions-per-step semantics by pairing output channels (an odd
+final channel is duplicated into the pair and its twin discarded), and
+the int32 accumulation is exact, so results stay bit-identical to the
+scalar reference.
+
+Concrete subclasses (``repro.blocks.paper``) provide ``kernel_body``
+and register themselves in the registry (``repro.blocks.registry``).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv2d, ref
+
+BIT_RANGE = (3, 16)     # sweep-supported data/coeff bit widths (paper §3.2)
+
+
+@dataclass(frozen=True)
+class ConvBlock:
+    """One parameterizable 3×3 convolution block (paper §3.1).
+
+    Frozen + hashable so instances can be jit static arguments; the
+    kernel body is supplied by subclasses via ``kernel_body``.
+    """
+
+    name: str
+    convs_per_step: int       # convolutions produced per grid step
+    dual_output: bool         # two coefficient planes per call?
+    description: str = ""
+
+    # -- metadata -----------------------------------------------------
+
+    def weight_shape(self, coeff_bits: int | None = None) -> Tuple[int, ...]:
+        """Per-call weight operand shape (``coeff_bits`` kept for blocks
+        whose operand layout depends on the coefficient width)."""
+        del coeff_bits
+        return (2, 3, 3) if self.dual_output else (3, 3)
+
+    def supports(self, data_bits: int, coeff_bits: int) -> bool:
+        """Whether the (data_bits, coeff_bits) design point is valid."""
+        lo, hi = BIT_RANGE
+        return lo <= data_bits <= hi and lo <= coeff_bits <= hi
+
+    def packed_ok(self, data_bits: int, coeff_bits: int) -> bool:
+        """Whether the block runs in its operand-packed regime at this
+        design point (False for blocks that never pack)."""
+        del data_bits, coeff_bits
+        return False
+
+    # -- execution ----------------------------------------------------
+
+    def kernel_body(self, *, tile_h: int, w: int, data_bits: int,
+                    coeff_bits: int):
+        """Pallas kernel body for one padded row-tile (subclasses)."""
+        raise NotImplementedError
+
+    def _validate(self, x, w, data_bits: int, coeff_bits: int,
+                  tile_h: int) -> None:
+        if not self.supports(data_bits, coeff_bits):
+            raise ValueError(
+                f"{self.name}: unsupported design point "
+                f"(data_bits={data_bits}, coeff_bits={coeff_bits})")
+        want = self.weight_shape(coeff_bits)
+        if tuple(w.shape) != want:
+            raise ValueError(
+                f"{self.name}: weight shape {tuple(w.shape)} != {want}")
+        if x.shape[0] % tile_h:
+            raise ValueError(
+                f"{self.name}: image height {x.shape[0]} not divisible by "
+                f"tile_h={tile_h}")
+
+    def apply(self, x, w, *, data_bits: int, coeff_bits: int,
+              tile_h: int = 16, interpret: bool = True):
+        """One plane through the Pallas kernel.  x: (H, W) container int;
+        w: ``weight_shape()``.  Returns int32 'same'-padded conv output —
+        (H, W), or (2, H, W) for dual-output blocks."""
+        self._validate(x, w, data_bits, coeff_bits, tile_h)
+        return _apply_one(self, x, w, data_bits=data_bits,
+                          coeff_bits=coeff_bits, tile_h=tile_h,
+                          interpret=interpret)
+
+    def reference(self, x, w):
+        """Pure-jnp oracle for ``apply`` (exact integer arithmetic)."""
+        if self.dual_output:
+            return jnp.stack([ref.conv2d_3x3_ref(x, w[0]),
+                              ref.conv2d_3x3_ref(x, w[1])])
+        return ref.conv2d_3x3_ref(x, w)
+
+    def apply_batched(self, x, w, *, data_bits: int, coeff_bits: int,
+                      tile_h: int = 16, interpret: bool = True):
+        """One CNN layer in a single jitted call.  x: (H, W, in_ch)
+        container int; w: (out_ch, in_ch, 3, 3).  Returns the exact int32
+        accumulator (out_ch, H, W) = Σ_ic conv(x[..,ic], w[oc,ic]) — the
+        caller applies its own rescale/activation."""
+        if not self.supports(data_bits, coeff_bits):
+            raise ValueError(
+                f"{self.name}: unsupported design point "
+                f"(data_bits={data_bits}, coeff_bits={coeff_bits})")
+        if w.ndim != 4 or tuple(w.shape[2:]) != (3, 3) \
+                or w.shape[1] != x.shape[2]:
+            raise ValueError(
+                f"{self.name}: expected weights (out_ch, in_ch={x.shape[2]},"
+                f" 3, 3), got {tuple(w.shape)}")
+        if x.shape[0] % tile_h:
+            raise ValueError(
+                f"{self.name}: image height {x.shape[0]} not divisible by "
+                f"tile_h={tile_h}")
+        return _apply_batched(self, x, w, data_bits=data_bits,
+                              coeff_bits=coeff_bits, tile_h=tile_h,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block", "data_bits", "coeff_bits", "tile_h", "interpret"))
+def _apply_one(block: ConvBlock, x, w, *, data_bits, coeff_bits, tile_h,
+               interpret):
+    kern = block.kernel_body(tile_h=tile_h, w=x.shape[1],
+                             data_bits=data_bits, coeff_bits=coeff_bits)
+    return conv2d.run_block_kernel(
+        kern, x, w, n_out=2 if block.dual_output else 1,
+        tile_h=tile_h, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block", "data_bits", "coeff_bits", "tile_h", "interpret"))
+def _apply_batched(block: ConvBlock, x, w, *, data_bits, coeff_bits,
+                   tile_h, interpret):
+    h, wd, in_ch = x.shape
+    out_ch = w.shape[0]
+    planes = x.transpose(2, 0, 1)                      # (in_ch, H, W)
+
+    def one(x2d, wk):
+        return _apply_one(block, x2d, wk, data_bits=data_bits,
+                          coeff_bits=coeff_bits, tile_h=tile_h,
+                          interpret=interpret)
+
+    # inner vmap pairs plane ic with weight [..., ic, :, :]; outer vmap
+    # broadcasts the planes across output channels (or channel pairs)
+    f = jax.vmap(jax.vmap(one, in_axes=(0, 0)), in_axes=(None, 0))
+    if not block.dual_output:
+        y = f(planes, w)                               # (oc, ic, H, W)
+        return jnp.sum(y, axis=1)                      # exact int32
+    # pair output channels two per call; odd tail duplicates the last
+    # channel and discards the twin — same sum as the scalar path
+    if out_ch % 2:
+        w = jnp.concatenate([w, w[-1:]], axis=0)
+    pairs = w.shape[0] // 2
+    wp = w.reshape(pairs, 2, in_ch, 3, 3).transpose(0, 2, 1, 3, 4)
+    y = f(planes, wp)                                  # (p, ic, 2, H, W)
+    acc = jnp.sum(y, axis=1)                           # (p, 2, H, W)
+    return acc.reshape(pairs * 2, h, wd)[:out_ch]

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional
 import numpy as np
 from scipy.optimize import linprog
 
+from repro.blocks import get_block
 from repro.core import polyfit, synth
 
 # v5e per-chip budgets in the allocator's normalized units
@@ -43,15 +44,29 @@ class BlockModels:
 
     @classmethod
     def fit(cls, rows: List[dict]) -> "BlockModels":
+        """Fit one model per (registered block, budgeted resource).
+
+        Every budgeted resource gets a model — including columns that are
+        constant over the sweep (e.g. Conv1 never touches the MXU):
+        ``fit_auto`` degrades to the constant polynomial there, which
+        predicts the flat value exactly, and ``demand()`` then always
+        covers every budgeted resource.  Block identity (convs/step)
+        comes from the ``ConvBlock`` registry when the block is
+        registered; rows naming an unregistered block (e.g. a cached
+        sweep from a session that registered a custom block) fall back
+        to the ``convs_per_step`` recorded in the rows themselves.
+        """
         blocks = sorted({r["block"] for r in rows})
         models, convs = {}, {}
         for b in blocks:
             d, c, ys = synth.sweep_arrays(rows, b)
             models[b] = {res: polyfit.fit_auto(d, c, ys[res], block=b)
-                         for res in V5E_BUDGETS if np.std(ys[res]) > 0
-                         or True}
-            convs[b] = next(r["convs_per_step"] for r in rows
-                            if r["block"] == b)
+                         for res in V5E_BUDGETS}
+            try:
+                convs[b] = float(get_block(b).convs_per_step)
+            except KeyError:
+                convs[b] = float(next(r["convs_per_step"] for r in rows
+                                      if r["block"] == b))
         return cls(models, convs)
 
     def demand(self, block: str, data_bits: int, coeff_bits: int) -> Dict:

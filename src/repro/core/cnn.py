@@ -1,10 +1,16 @@
 """Fixed-point CNN built on the paper's convolution-block library.
 
 This is the deployment story of the paper closed end-to-end: a small CNN
-whose every 3×3 layer is executed by one of the four parameterizable
-blocks, with the block TYPE chosen *by the fitted resource models* (the
-Table-5 allocator) under a per-platform budget — exactly the "model-driven
-block selection" workflow of §4.2.
+whose every 3×3 layer is executed by one of the parameterizable blocks
+from the ``repro.blocks`` registry, with the block chosen *by the fitted
+resource models* (the Table-5 allocator) under a per-platform budget —
+exactly the "model-driven block selection" workflow of §4.2.
+
+The hot path is ``cnn_forward``: each layer runs through
+``ConvBlock.apply_batched``, which convolves all (out_ch, in_ch) planes
+in ONE jitted/vmapped kernel call.  ``cnn_forward_loop`` keeps the seed's
+O(out_ch·in_ch) per-plane dispatch as the benchmark baseline and a
+cross-check; both are bit-exact against ``cnn_forward_ref``.
 
 Numerics: power-of-two fixed-point. Activations and weights are quantized
 to (data_bits, coeff_bits); accumulation is exact int32; each layer
@@ -14,13 +20,13 @@ rescales by a right-shift and clamps back into the activation range
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.blocks import BlockLike, ConvBlock, get_block, list_blocks
 from repro.core import allocate, synth
 from repro.kernels import conv2d
 from repro.kernels import ops
@@ -33,7 +39,7 @@ class ConvLayerSpec:
     data_bits: int = 8
     coeff_bits: int = 8
     shift: int = 7                 # post-accumulation right-shift
-    block: Optional[str] = None    # None → allocator decides
+    block: Optional[str] = None    # registry name; None → allocator decides
 
 
 @dataclass
@@ -43,31 +49,51 @@ class CNNConfig:
     img_w: int = 128
 
 
+def quickstart_cnn_config() -> CNNConfig:
+    """The quickstart CNN (examples/cnn_blocks.py and the batched-vs-loop
+    benchmark share this single definition)."""
+    return CNNConfig(layers=(
+        ConvLayerSpec(1, 8, data_bits=8, coeff_bits=6),
+        ConvLayerSpec(8, 8, data_bits=8, coeff_bits=6),
+        ConvLayerSpec(8, 4, data_bits=6, coeff_bits=4),
+    ), img_h=32, img_w=128)
+
+
 def choose_blocks(cfg: CNNConfig, rows=None,
-                  budgets=None) -> List[str]:
+                  budgets=None) -> List[ConvBlock]:
     """Model-driven block selection (paper §4.2): for each layer pick the
-    block that maximizes convolutions/step-per-resource under the fitted
-    models — conv pairs go to dual-output blocks while the MXU budget
-    lasts, the rest to Conv1 (logic) / Conv2 (single-MXU)."""
+    registered block that maximizes convolutions/step-per-resource under
+    the fitted models — conv pairs go to dual-output blocks while the MXU
+    budget lasts, the rest to logic/single-MXU blocks.  An explicit
+    ``ConvLayerSpec.block`` wins unconditionally."""
     rows = rows if rows is not None else synth.run_sweep()
     bm = allocate.BlockModels.fit(rows)
     budgets = dict(budgets or allocate.V5E_BUDGETS)
-    chosen = []
+    # seed preference order: dual-output blocks first (conv4, conv3,
+    # conv2, conv1); the last candidate is the logic fallback
+    candidates = sorted((get_block(n) for n in list_blocks()
+                         if n in bm.models),
+                        key=lambda blk: (blk.convs_per_step, blk.name),
+                        reverse=True)
+    fallback = candidates[-1]
+    chosen: List[ConvBlock] = []
     remaining = {k: v * 0.8 for k, v in budgets.items()}
     for spec in cfg.layers:
         if spec.block is not None:
-            chosen.append(spec.block)
+            chosen.append(get_block(spec.block))
             continue
-        best, best_score = "conv1", -1.0
-        for b in ("conv4", "conv3", "conv2", "conv1"):
-            demand = bm.demand(b, spec.data_bits, spec.coeff_bits)
+        best, best_score = fallback, -1.0
+        for blk in candidates:
+            if not blk.supports(spec.data_bits, spec.coeff_bits):
+                continue
+            demand = bm.demand(blk.name, spec.data_bits, spec.coeff_bits)
             if any(demand[r] > remaining[r] for r in demand):
                 continue
-            score = bm.convs[b] / (1e-12 + sum(
+            score = bm.convs[blk.name] / (1e-12 + sum(
                 demand[r] / budgets[r] for r in demand))
             if score > best_score:
-                best, best_score = b, score
-        demand = bm.demand(best, spec.data_bits, spec.coeff_bits)
+                best, best_score = blk, score
+        demand = bm.demand(best.name, spec.data_bits, spec.coeff_bits)
         for r in demand:
             remaining[r] = max(0.0, remaining[r] - demand[r])
         chosen.append(best)
@@ -85,42 +111,59 @@ def init_cnn(key, cfg: CNNConfig):
     return params
 
 
-def _run_block_conv(block, x2d, w2d, spec):
-    y = ops.conv_block(block, x2d, w2d, data_bits=spec.data_bits,
-                       coeff_bits=spec.coeff_bits)
-    return y
+def _requantize(acc, spec: ConvLayerSpec):
+    """Rescale + ReLU + requantize one layer's int32 accumulator
+    ((out_ch, H, W)) back into the (H, W, out_ch) activation range."""
+    lo, hi = 0, (1 << (spec.data_bits - 1)) - 1
+    return jnp.clip(acc >> spec.shift, lo, hi) \
+        .astype(conv2d.container_dtype(spec.data_bits)) \
+        .transpose(1, 2, 0)
 
 
-def cnn_forward(params, x, cfg: CNNConfig, blocks: List[str]):
+def cnn_forward(params, x, cfg: CNNConfig, blocks: Sequence[BlockLike]):
     """x: (H, W, C_in) quantized ints.  Returns (H, W, C_out) of the last
-    layer.  Each (out_ch, in_ch) plane runs through its assigned block;
-    dual-output blocks (conv3/conv4) process two output channels per call
-    — the paper's 2-convolutions-per-DSP win, visible as half the calls.
-    """
+    layer.  Each layer is ONE ``apply_batched`` call — all (out_ch,
+    in_ch) planes through the assigned block's kernel in a single jitted
+    vmap; dual-output blocks pair output channels, keeping the paper's
+    2-convolutions-per-step semantics."""
     act = x
     for spec, w, block in zip(cfg.layers, params, blocks):
+        blk = get_block(block)
+        acc = blk.apply_batched(act, w, data_bits=spec.data_bits,
+                                coeff_bits=spec.coeff_bits)
+        act = _requantize(acc, spec)
+    return act
+
+
+def cnn_forward_loop(params, x, cfg: CNNConfig,
+                     blocks: Sequence[BlockLike]):
+    """Seed-era baseline: one Python-level kernel dispatch per
+    (out_ch, in_ch) plane.  Kept for the batched-vs-loop benchmark
+    (benchmarks/cnn_forward_bench.py) and as a cross-check; prefer
+    ``cnn_forward``."""
+    act = x
+    for spec, w, block in zip(cfg.layers, params, blocks):
+        blk = get_block(block)
         h, wd, cin = act.shape
         acc = jnp.zeros((spec.out_channels, h, wd), jnp.int32)
-        dual = block in ("conv3", "conv4")
-        step = 2 if dual else 1
+        step = 2 if blk.dual_output else 1
         for oc in range(0, spec.out_channels, step):
             for ic in range(cin):
                 x2d = act[:, :, ic]
-                if dual:
+                if blk.dual_output:
                     oc2 = min(oc + 1, spec.out_channels - 1)
                     w2 = jnp.stack([w[oc, ic], w[oc2, ic]])
-                    y = _run_block_conv(block, x2d, w2, spec)
+                    y = blk.apply(x2d, w2, data_bits=spec.data_bits,
+                                  coeff_bits=spec.coeff_bits)
                     acc = acc.at[oc].add(y[0])
                     if oc2 != oc:
                         acc = acc.at[oc2].add(y[1])
                 else:
-                    y = _run_block_conv(block, x2d, w[oc, ic], spec)
+                    y = blk.apply(x2d, w[oc, ic],
+                                  data_bits=spec.data_bits,
+                                  coeff_bits=spec.coeff_bits)
                     acc = acc.at[oc].add(y)
-        # rescale + ReLU + requantize
-        lo, hi = 0, (1 << (spec.data_bits - 1)) - 1
-        act = jnp.clip(acc >> spec.shift, lo, hi) \
-            .astype(conv2d.container_dtype(spec.data_bits)) \
-            .transpose(1, 2, 0)
+        act = _requantize(acc, spec)
     return act
 
 
@@ -135,8 +178,5 @@ def cnn_forward_ref(params, x, cfg: CNNConfig):
             for ic in range(cin):
                 acc = acc.at[oc].add(
                     ref.conv2d_3x3_ref(act[:, :, ic], w[oc, ic]))
-        lo, hi = 0, (1 << (spec.data_bits - 1)) - 1
-        act = jnp.clip(acc >> spec.shift, lo, hi) \
-            .astype(conv2d.container_dtype(spec.data_bits)) \
-            .transpose(1, 2, 0)
+        act = _requantize(acc, spec)
     return act

@@ -27,9 +27,10 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
+from repro.blocks import BlockLike, get_block
 from repro.configs.paper_conv import ConvSweepConfig, SWEEP
 from repro.core import hloscan
-from repro.kernels import conv2d, ops
+from repro.kernels import conv2d
 
 RESOURCES = ["vpu_ops", "add_chain", "mxu_cost", "mxu_flops",
              "mem_move_bytes", "temp_bytes", "hbm_bytes", "vmem_bytes"]
@@ -47,35 +48,49 @@ def fpga_name(resource: str) -> str:
 
 def _vmem_bytes(cfg: ConvSweepConfig, data_bits: int, coeff_bits: int,
                 n_out: int) -> float:
-    """Analytic BlockSpec working set: padded image + weights + out tile."""
+    """Analytic BlockSpec working set: padded image + weights + out tile.
+
+    The padded image is staged into VMEM in its *data container* dtype
+    (int8 ≤ 8 bits, else int16 — kernels widen per-tile), so the image
+    term scales with ``d_item``, the datapath-width ∝ memory effect the
+    paper measures; weights likewise use the coeff container, while the
+    int32 output tile is width-independent."""
     img_h = 4 * cfg.tile_h  # sweep image height (4 tiles)
     d_item = 1 if data_bits <= 8 else 2
     c_item = 1 if coeff_bits <= 8 else 2
-    img = (img_h + 2) * (cfg.tile_w + 2) * 4        # int32 padded in VMEM
+    img = (img_h + 2) * (cfg.tile_w + 2) * d_item   # container-width pad
     wk = n_out * 9 * c_item
     out = n_out * cfg.tile_h * cfg.tile_w * 4
-    return float(img + wk + out + d_item * 0)       # container noted via hbm
+    return float(img + wk + out)
 
 
-def synth_one(block: str, data_bits: int, coeff_bits: int,
+def synth_one(block: BlockLike, data_bits: int, coeff_bits: int,
               cfg: ConvSweepConfig = SWEEP) -> Dict[str, float]:
+    """Trace one registered block at one design point; all block
+    properties (weight shape, convs/step, packing) come from the
+    ``ConvBlock`` registry entry, not re-derived from the name."""
+    blk = get_block(block)
     h, w = 4 * cfg.tile_h, cfg.tile_w
     x = jnp.zeros((h, w), conv2d.container_dtype(data_bits))
-    n_out = 2 if block in ("conv3", "conv4") else 1
-    wshape = (2, 3, 3) if n_out == 2 else (3, 3)
-    wk = jnp.zeros(wshape, conv2d.container_dtype(coeff_bits))
+    wk = jnp.zeros(blk.weight_shape(coeff_bits),
+                   conv2d.container_dtype(coeff_bits))
 
     res = hloscan.jaxpr_resources(
-        lambda a, b: ops.conv_block(block, a, b, data_bits=data_bits,
-                                    coeff_bits=coeff_bits,
-                                    tile_h=cfg.tile_h),
+        lambda a, b: blk.apply(a, b, data_bits=data_bits,
+                               coeff_bits=coeff_bits, tile_h=cfg.tile_h),
         x, wk)
     out = {k: float(res.get(k, 0.0)) for k in RESOURCES if k != "vmem_bytes"}
-    out["vmem_bytes"] = _vmem_bytes(cfg, data_bits, coeff_bits, n_out)
-    out["convs_per_step"] = float(n_out)
-    out["packed"] = float(block == "conv3"
-                          and conv2d.conv3_packed_ok(data_bits, coeff_bits))
+    out["vmem_bytes"] = _vmem_bytes(cfg, data_bits, coeff_bits,
+                                    2 if blk.dual_output else 1)
+    out["convs_per_step"] = float(blk.convs_per_step)
+    out["packed"] = float(blk.packed_ok(data_bits, coeff_bits))
     return out
+
+
+# bump when row semantics change (e.g. the _vmem_bytes container-width
+# model) so pre-existing caches regenerate instead of silently serving
+# stale numbers; legacy bare-list caches count as version 0
+SWEEP_SCHEMA_VERSION = 2
 
 
 def run_sweep(cfg: ConvSweepConfig = SWEEP,
@@ -83,16 +98,22 @@ def run_sweep(cfg: ConvSweepConfig = SWEEP,
               force: bool = False) -> List[dict]:
     cache = Path(cache_path)
     if cache.exists() and not force:
-        return json.loads(cache.read_text())
+        payload = json.loads(cache.read_text())
+        if (isinstance(payload, dict)
+                and payload.get("version") == SWEEP_SCHEMA_VERSION):
+            return payload["rows"]
+        # stale or pre-versioning cache → fall through and re-sweep
     rows = []
     for block in cfg.blocks:
+        blk = get_block(block)
         for d in cfg.data_bits:
             for c in cfg.coeff_bits:
-                row = {"block": block, "data_bits": d, "coeff_bits": c}
-                row.update(synth_one(block, d, c, cfg))
+                row = {"block": blk.name, "data_bits": d, "coeff_bits": c}
+                row.update(synth_one(blk, d, c, cfg))
                 rows.append(row)
     cache.parent.mkdir(parents=True, exist_ok=True)
-    cache.write_text(json.dumps(rows))
+    cache.write_text(json.dumps({"version": SWEEP_SCHEMA_VERSION,
+                                 "rows": rows}))
     return rows
 
 

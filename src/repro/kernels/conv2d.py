@@ -22,12 +22,15 @@ convolution per cycle" → one tile per grid step).
 
 Containers: data/coeff values quantized to ``*_bits`` live in the smallest
 supported integer container (int8 ≤ 8 bits, else int16); arithmetic is
-exact in int32.
+exact in int32.  The padded image is staged into VMEM in its *container*
+dtype (kernels widen per-tile), so the VMEM working set scales with the
+data container width — mirrored by ``synth._vmem_bytes``.
+
+Block selection lives in ``repro.blocks`` (the ConvBlock registry); this
+module only provides the kernel bodies and the ``pallas_call`` runner.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +72,7 @@ def _acc_dtype(data_bits: int, coeff_bits: int):
     return jnp.int16 if need <= 16 else jnp.int32
 
 
-def _conv1_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
+def conv1_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
     i = pl.program_id(0)
     adt = _acc_dtype(data_bits, coeff_bits)
     xpad = jax.lax.dynamic_slice(
@@ -101,7 +104,7 @@ def _dot_dtype(data_bits: int, coeff_bits: int):
     return jnp.int8 if (data_bits <= 8 and coeff_bits <= 8) else jnp.int32
 
 
-def _conv2_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
+def conv2_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
     i = pl.program_id(0)
     ddt = _dot_dtype(data_bits, coeff_bits)
     xpad = jax.lax.dynamic_slice(
@@ -113,7 +116,7 @@ def _conv2_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
     o_ref[...] = y.reshape(th, w)
 
 
-def _conv3_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
+def conv3_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
     i = pl.program_id(0)
     xpad = jax.lax.dynamic_slice(
         x_ref[...], (i * th, 0), (th + 2, w + 2)).astype(jnp.int32)
@@ -140,7 +143,7 @@ def _conv3_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
             o_ref[j] = y.reshape(th, w)
 
 
-def _conv4_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
+def conv4_kernel(x_ref, w_ref, o_ref, *, th, w, data_bits, coeff_bits):
     i = pl.program_id(0)
     ddt = _dot_dtype(data_bits, coeff_bits)
     xpad = jax.lax.dynamic_slice(
@@ -179,36 +182,15 @@ def _call(kernel, xpad, wk, *, th, w, n_out, interpret):
     )(xpad, wk)
 
 
-def conv_block(block: str, x, wk, *, data_bits: int, coeff_bits: int,
-               tile_h: int = 16, interpret: bool = True):
-    """Run one paper block.  x: (H, W) container int; wk: (3,3) for
-    conv1/conv2, (2,3,3) for conv3/conv4.  Returns int32 conv output
-    ((H, W) or (2, H, W)), zero-padded 'same' semantics."""
+def run_block_kernel(kernel, x, wk, *, n_out: int, tile_h: int = 16,
+                     interpret: bool = True):
+    """Pad + run one block kernel body.  x: (H, W) container int; wk:
+    (3,3) or (2,3,3).  Returns int32 conv output ((H, W) or (2, H, W)),
+    zero-padded 'same' semantics.  The pad keeps the data container
+    dtype — VMEM footprint scales with the container width; kernels
+    widen per-tile.  Dispatch by block lives in ``repro.blocks``."""
     h, w = x.shape
     assert h % tile_h == 0, (h, tile_h)
-    xpad = jnp.pad(x.astype(jnp.int32), ((1, 1), (1, 1)))
-    if block == "conv1":
-        kern = functools.partial(_conv1_kernel, th=tile_h, w=w,
-                                 data_bits=data_bits,
-                                 coeff_bits=coeff_bits)
-        return _call(kern, xpad, wk, th=tile_h, w=w, n_out=1,
-                     interpret=interpret)
-    if block == "conv2":
-        kern = functools.partial(_conv2_kernel, th=tile_h, w=w,
-                                 data_bits=data_bits,
-                                 coeff_bits=coeff_bits)
-        return _call(kern, xpad, wk, th=tile_h, w=w, n_out=1,
-                     interpret=interpret)
-    if block == "conv3":
-        kern = functools.partial(_conv3_kernel, th=tile_h, w=w,
-                                 data_bits=data_bits,
-                                 coeff_bits=coeff_bits)
-        return _call(kern, xpad, wk, th=tile_h, w=w, n_out=2,
-                     interpret=interpret)
-    if block == "conv4":
-        kern = functools.partial(_conv4_kernel, th=tile_h, w=w,
-                                 data_bits=data_bits,
-                                 coeff_bits=coeff_bits)
-        return _call(kern, xpad, wk, th=tile_h, w=w, n_out=2,
-                     interpret=interpret)
-    raise ValueError(f"unknown block {block!r}")
+    xpad = jnp.pad(x, ((1, 1), (1, 1)))
+    return _call(kernel, xpad, wk, th=tile_h, w=w, n_out=n_out,
+                 interpret=interpret)

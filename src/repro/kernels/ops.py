@@ -1,8 +1,14 @@
-"""Jit'd public wrappers for the kernel library + quantization helpers."""
+"""Jit'd public wrappers for the kernel library + quantization helpers.
+
+``conv_block``/``conv_block_ref`` survive only as deprecated shims over
+the ``repro.blocks`` registry — use ``get_block(name).apply(...)`` /
+``.reference(...)`` instead.
+"""
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -19,18 +25,32 @@ def quantize_fixed(x, bits: int, *, signed: bool = True):
     return q.astype(conv2d.container_dtype(bits))
 
 
-@functools.partial(jax.jit, static_argnames=("block", "data_bits",
-                                             "coeff_bits", "tile_h",
-                                             "interpret"))
 def conv_block(block, x, w, *, data_bits, coeff_bits, tile_h=16,
                interpret=True):
-    return conv2d.conv_block(block, x, w, data_bits=data_bits,
-                             coeff_bits=coeff_bits, tile_h=tile_h,
-                             interpret=interpret)
+    """Deprecated string-dispatch shim; use
+    ``repro.blocks.get_block(block).apply(...)``."""
+    warnings.warn(
+        "ops.conv_block is deprecated; use "
+        "repro.blocks.get_block(name).apply(...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.blocks import get_block
+    try:
+        blk = get_block(block)
+    except KeyError as e:       # preserve the seed contract (ValueError)
+        raise ValueError(f"unknown block {block!r}") from e
+    return blk.apply(x, w, data_bits=data_bits, coeff_bits=coeff_bits,
+                     tile_h=tile_h, interpret=interpret)
 
 
 def conv_block_ref(block, x, w, **kw):
-    return ref.conv_block_ref(block, x, w, **kw)
+    """Deprecated shim; use ``repro.blocks.get_block(block).reference``."""
+    warnings.warn(
+        "ops.conv_block_ref is deprecated; use "
+        "repro.blocks.get_block(name).reference(...)",
+        DeprecationWarning, stacklevel=2)
+    del kw  # legacy signature compatibility
+    from repro.blocks import get_block
+    return get_block(block).reference(x, w)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

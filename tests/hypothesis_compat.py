@@ -1,0 +1,43 @@
+"""Guarded hypothesis import (ISSUE satellite: the seed suite died at
+collection on ``ModuleNotFoundError: hypothesis``).
+
+``from hypothesis_compat import given, settings, st`` works with or
+without hypothesis installed: when it is missing, ``@given`` replaces the
+test with a cleanly-skipped stand-in (via ``pytest.mark.skip``) so the
+module's deterministic tests still collect and run — strictly more
+coverage than skipping the whole module with ``pytest.importorskip``.
+CI installs hypothesis from requirements-dev.txt, so property tests
+always run there.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed "
+                              "(see requirements-dev.txt)")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Evaluates module-level strategy expressions to inert Nones."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

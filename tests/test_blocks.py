@@ -1,0 +1,139 @@
+"""The repro.blocks ConvBlock API: registry, metadata, batched forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.blocks import (ConvBlock, Conv2Block, get_block, list_blocks,
+                          register_block, unregister_block)
+from repro.core.cnn import (CNNConfig, ConvLayerSpec, choose_blocks,
+                            cnn_forward, cnn_forward_ref, init_cnn)
+from repro.kernels import ops
+
+DESIGN_POINTS = [(4, 4), (8, 8), (8, 10)]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip():
+    names = list_blocks()
+    assert set(names) >= {"conv1", "conv2", "conv3", "conv4"}
+    for name in names:
+        blk = get_block(name)
+        assert blk.name == name
+        assert get_block(blk) is blk          # ConvBlock coerces to itself
+
+
+def test_registry_unknown_and_duplicate():
+    with pytest.raises(KeyError, match="conv99"):
+        get_block("conv99")
+    with pytest.raises(ValueError, match="already registered"):
+        register_block(get_block("conv1"))
+
+
+def test_register_custom_block():
+    custom = Conv2Block(name="conv2_custom", convs_per_step=1,
+                        dual_output=False, description="test clone")
+    register_block(custom)
+    try:
+        assert "conv2_custom" in list_blocks()
+        rng = np.random.default_rng(3)
+        x = ops.quantize_fixed(
+            jnp.asarray(rng.integers(-100, 100, (16, 128)), jnp.float32), 8)
+        w = ops.quantize_fixed(
+            jnp.asarray(rng.integers(-100, 100, (3, 3)), jnp.float32), 8)
+        y = get_block("conv2_custom").apply(x, w, data_bits=8, coeff_bits=8)
+        np.testing.assert_array_equal(np.asarray(y),
+                                      np.asarray(custom.reference(x, w)))
+    finally:
+        unregister_block("conv2_custom")
+    assert "conv2_custom" not in list_blocks()
+
+
+# ---------------------------------------------------------------------------
+# metadata
+# ---------------------------------------------------------------------------
+
+def test_block_metadata():
+    for name in ("conv1", "conv2", "conv3", "conv4"):
+        blk = get_block(name)
+        assert blk.dual_output == (name in ("conv3", "conv4"))
+        assert blk.convs_per_step == (2 if blk.dual_output else 1)
+        assert blk.weight_shape(8) == ((2, 3, 3) if blk.dual_output
+                                       else (3, 3))
+        assert blk.supports(8, 8) and not blk.supports(2, 8)
+    assert get_block("conv3").packed_ok(4, 4)
+    assert not get_block("conv3").packed_ok(8, 8)
+
+
+def test_apply_validates():
+    blk = get_block("conv2")
+    x = jnp.zeros((16, 128), jnp.int8)
+    with pytest.raises(ValueError, match="unsupported design point"):
+        blk.apply(x, jnp.zeros((3, 3), jnp.int8), data_bits=2, coeff_bits=8)
+    with pytest.raises(ValueError, match="weight shape"):
+        blk.apply(x, jnp.zeros((2, 3, 3), jnp.int8),
+                  data_bits=8, coeff_bits=8)
+    with pytest.raises(ValueError, match="not divisible"):
+        blk.apply(jnp.zeros((17, 128), jnp.int8), jnp.zeros((3, 3), jnp.int8),
+                  data_bits=8, coeff_bits=8)
+
+
+# ---------------------------------------------------------------------------
+# apply_batched: bit-exact vs the CNN oracle for every block
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("db,cb", DESIGN_POINTS)
+@pytest.mark.parametrize("name", ["conv1", "conv2", "conv3", "conv4"])
+def test_apply_batched_bit_exact(name, db, cb):
+    """A two-layer CNN forced onto one block (odd + even out_channels to
+    exercise the dual-output pairing tail) must equal cnn_forward_ref."""
+    cfg = CNNConfig(layers=(
+        ConvLayerSpec(2, 3, data_bits=db, coeff_bits=cb, block=name),
+        ConvLayerSpec(3, 4, data_bits=db, coeff_bits=cb, block=name),
+    ), img_h=16, img_w=128)
+    params = init_cnn(jax.random.PRNGKey(42), cfg)
+    rng = np.random.default_rng(db * 10 + cb)
+    x = ops.quantize_fixed(
+        jnp.asarray(rng.integers(0, 1 << (db - 1), (16, 128, 2)),
+                    jnp.float32), db)
+    blocks = [get_block(name)] * 2
+    y = cnn_forward(params, x, cfg, blocks)
+    yr = cnn_forward_ref(params, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_apply_batched_raw_accumulator():
+    """apply_batched returns the exact int32 Σ_ic accumulator."""
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    x = ops.quantize_fixed(
+        jnp.asarray(rng.integers(-100, 100, (16, 128, 3)), jnp.float32), 8)
+    w = ops.quantize_fixed(
+        jnp.asarray(rng.integers(-100, 100, (5, 3, 3, 3)), jnp.float32), 8)
+    for name in list_blocks():
+        acc = get_block(name).apply_batched(x, w, data_bits=8, coeff_bits=8)
+        accr = jnp.stack([
+            sum(ref.conv2d_3x3_ref(x[:, :, ic], w[oc, ic])
+                for ic in range(3)) for oc in range(5)])
+        assert acc.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(accr))
+
+
+# ---------------------------------------------------------------------------
+# choose_blocks honors explicit overrides
+# ---------------------------------------------------------------------------
+
+def test_choose_blocks_respects_override():
+    cfg = CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv1"),
+        ConvLayerSpec(4, 4, data_bits=8, coeff_bits=6),
+        ConvLayerSpec(4, 2, data_bits=6, coeff_bits=6, block="conv3"),
+    ), img_h=16, img_w=128)
+    blocks = choose_blocks(cfg)
+    assert blocks[0] is get_block("conv1")
+    assert blocks[2] is get_block("conv3")
+    assert isinstance(blocks[1], ConvBlock)

@@ -4,8 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.blocks import ConvBlock, get_block
 from repro.core.cnn import (CNNConfig, ConvLayerSpec, choose_blocks,
-                            cnn_forward, cnn_forward_ref, init_cnn)
+                            cnn_forward, cnn_forward_loop, cnn_forward_ref,
+                            init_cnn)
 from repro.kernels import ops
 
 
@@ -21,7 +23,9 @@ def test_allocator_chooses_blocks():
     cfg = _cfg()
     blocks = choose_blocks(cfg)
     assert len(blocks) == 3
-    assert all(b in ("conv1", "conv2", "conv3", "conv4") for b in blocks)
+    assert all(isinstance(b, ConvBlock) for b in blocks)
+    assert all(b.name in ("conv1", "conv2", "conv3", "conv4")
+               for b in blocks)
 
 
 def test_cnn_blocks_match_reference():
@@ -30,8 +34,25 @@ def test_cnn_blocks_match_reference():
     rng = np.random.default_rng(0)
     x = ops.quantize_fixed(
         jnp.asarray(rng.integers(0, 100, (16, 128, 1)), jnp.float32), 8)
-    for blocks in (["conv1", "conv2", "conv4"], choose_blocks(cfg)):
+    explicit = [get_block(n) for n in ("conv1", "conv2", "conv4")]
+    yr = cnn_forward_ref(params, x, cfg)
+    for blocks in (explicit, choose_blocks(cfg)):
         y = cnn_forward(params, x, cfg, blocks)
-        yr = cnn_forward_ref(params, x, cfg)
         np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
         assert y.shape == (16, 128, 2)
+
+
+def test_cnn_forward_accepts_names_and_loop_matches():
+    """Back-compat: block names coerce through the registry, and the
+    per-plane loop baseline stays bit-exact with the batched path."""
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    x = ops.quantize_fixed(
+        jnp.asarray(rng.integers(0, 100, (16, 128, 1)), jnp.float32), 8)
+    names = ["conv3", "conv1", "conv2"]
+    y = cnn_forward(params, x, cfg, names)
+    yl = cnn_forward_loop(params, x, cfg, names)
+    yr = cnn_forward_ref(params, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(yl), np.asarray(yr))

@@ -3,8 +3,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
+from repro.blocks import get_block, list_blocks
 from repro.kernels import conv2d, ops
 
 BITS = st.integers(min_value=3, max_value=16)
@@ -21,22 +22,22 @@ def _rand_data(rng, bits, shape):
                                    (9, 9), (12, 5), (16, 16)])
 def test_block_matches_oracle(block, db, cb):
     rng = np.random.default_rng(db * 100 + cb)
+    blk = get_block(block)
     x = _rand_data(rng, db, (64, 128))
-    wshape = (2, 3, 3) if block in ("conv3", "conv4") else (3, 3)
-    w = _rand_data(rng, cb, wshape)
-    y = ops.conv_block(block, x, w, data_bits=db, coeff_bits=cb)
-    yr = ops.conv_block_ref(block, x, w)
+    w = _rand_data(rng, cb, blk.weight_shape(cb))
+    y = blk.apply(x, w, data_bits=db, coeff_bits=cb)
+    yr = blk.reference(x, w)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
 
 
 @pytest.mark.parametrize("tile_h", [8, 16, 32])
 def test_tile_shapes(tile_h):
     rng = np.random.default_rng(tile_h)
+    blk = get_block("conv2")
     x = _rand_data(rng, 8, (64, 128))
     w = _rand_data(rng, 8, (3, 3))
-    y = ops.conv_block("conv2", x, w, data_bits=8, coeff_bits=8,
-                       tile_h=tile_h)
-    yr = ops.conv_block_ref("conv2", x, w)
+    y = blk.apply(x, w, data_bits=8, coeff_bits=8, tile_h=tile_h)
+    yr = blk.reference(x, w)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
 
 
@@ -46,10 +47,11 @@ def test_conv3_packing_property(db, cb, seed):
     """conv3 (packed or fallback) always equals the oracle — the packing
     split must be exact for every representable operand pair."""
     rng = np.random.default_rng(seed)
+    blk = get_block("conv3")
     x = _rand_data(rng, db, (16, 128))
     w = _rand_data(rng, cb, (2, 3, 3))
-    y = ops.conv_block("conv3", x, w, data_bits=db, coeff_bits=cb)
-    yr = ops.conv_block_ref("conv3", x, w)
+    y = blk.apply(x, w, data_bits=db, coeff_bits=cb)
+    yr = blk.reference(x, w)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
 
 
@@ -58,6 +60,26 @@ def test_packed_regime_boundary():
     assert conv2d.conv3_packed_ok(8, 4)
     assert not conv2d.conv3_packed_ok(8, 8)
     assert not conv2d.conv3_packed_ok(16, 16)
+    blk = get_block("conv3")
+    assert blk.packed_ok(6, 6) and not blk.packed_ok(8, 8)
+    assert all(not get_block(b).packed_ok(4, 4)
+               for b in list_blocks() if b != "conv3")
+
+
+def test_deprecated_conv_block_shim():
+    """ops.conv_block survives only as a deprecated string-dispatch shim
+    over the registry; it must warn and stay bit-exact."""
+    rng = np.random.default_rng(7)
+    x = _rand_data(rng, 8, (32, 128))
+    w = _rand_data(rng, 8, (3, 3))
+    with pytest.warns(DeprecationWarning):
+        y = ops.conv_block("conv2", x, w, data_bits=8, coeff_bits=8)
+    with pytest.warns(DeprecationWarning):
+        yr = ops.conv_block_ref("conv2", x, w)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    with pytest.raises(ValueError, match="unknown block"):  # seed contract
+        with pytest.warns(DeprecationWarning):
+            ops.conv_block("conv9", x, w, data_bits=8, coeff_bits=8)
 
 
 @pytest.mark.parametrize("s,c,k", [(16, 8, 4), (37, 64, 4), (128, 128, 2)])
