@@ -1,0 +1,53 @@
+"""Deployment-planner benchmark: planning latency over the catalog and
+the resulting frontier/selection quality on the quickstart CNN."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import allocate, deploy, synth
+from repro.core.allocate import DEVICE_CATALOG
+from repro.core.cnn import quickstart_cnn_config
+
+
+def run():
+    cfg = quickstart_cnn_config()
+    rows = synth.run_sweep()
+    bm = allocate.BlockModels.fit(rows)
+
+    for dev in DEVICE_CATALOG:
+        t0 = time.perf_counter()
+        try:
+            plan = deploy.plan_deployment(
+                cfg, bm, dev, bit_candidates=deploy.DEFAULT_BIT_CANDIDATES)
+            detail = (f"feasible=1;util={plan.max_usage_pct:.1f}%;"
+                      f"blocks={'/'.join(plan.block_names())}")
+        except deploy.DeploymentError:
+            detail = "feasible=0"
+        emit(f"deploy/plan_{dev.name}",
+             (time.perf_counter() - t0) * 1e6, detail)
+
+    t0 = time.perf_counter()
+    frontier = deploy.pareto_frontier(cfg, bm, DEVICE_CATALOG)
+    emit("deploy/pareto_frontier", (time.perf_counter() - t0) * 1e6,
+         f"points={len(frontier)};devices="
+         + "/".join(sorted({p.device.name for p in frontier})))
+
+    t0 = time.perf_counter()
+    dev, plan = deploy.select_device(
+        cfg, bm, bit_candidates=deploy.DEFAULT_BIT_CANDIDATES)
+    emit("deploy/select_device", (time.perf_counter() - t0) * 1e6,
+         f"device={dev.name};cost={dev.cost};util={plan.max_usage_pct:.1f}%")
+
+    t0 = time.perf_counter()
+    val = deploy.validate_plan(plan, cfg)
+    worst = max(val.metrics[r]["mape_pct"]
+                for r in allocate.BUDGET_RESOURCES)
+    emit("deploy/validate_plan", (time.perf_counter() - t0) * 1e6,
+         f"bit_exact={int(val.bit_exact)};worst_mape={worst:.2f}%;"
+         f"quant_err={val.quant_error:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -5,15 +5,16 @@ from __future__ import annotations
 
 
 def main() -> None:
-    from benchmarks import (cnn_forward_bench, model_dse_bench,
-                            roofline_bench, table2_blocks, table3_corr,
-                            table4_models, table5_alloc)
+    from benchmarks import (cnn_forward_bench, deploy_bench,
+                            model_dse_bench, roofline_bench, table2_blocks,
+                            table3_corr, table4_models, table5_alloc)
     print("name,us_per_call,derived")
     table2_blocks.run()
     table3_corr.run()
     table4_models.run()
     table5_alloc.run()
     cnn_forward_bench.run()
+    deploy_bench.run()
     roofline_bench.run()
     model_dse_bench.run()
 

@@ -1,0 +1,80 @@
+"""Deployment planning end-to-end (the paper's "FPGA selection and
+optimized CNN deployment" tool, §4.1-4.2): plan the quickstart CNN over
+the device catalog, print the Pareto frontier, pick the cheapest part
+that fits, execute the plan bit-exactly, and validate the fitted
+resource models against a fresh trace of the deployed kernels.
+
+    PYTHONPATH=src python examples/deploy_plan.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import allocate, deploy, synth
+from repro.core.allocate import BUDGET_RESOURCES, DEVICE_CATALOG
+from repro.core.cnn import quickstart_cnn_config
+
+
+def main():
+    cfg = quickstart_cnn_config()
+    rows = synth.run_sweep()
+    bm = allocate.BlockModels.fit(rows)
+
+    print("device catalog:")
+    for dev in DEVICE_CATALOG:
+        print(f"  {dev.name:<5} cost={dev.cost:<4} {dev.description}")
+
+    print("\nper-device fit at the spec's own bits (target 80%):")
+    for dev in DEVICE_CATALOG:
+        try:
+            plan = deploy.plan_deployment(cfg, bm, dev)
+            print(f"  {dev.name:<5} fits: blocks={plan.block_names()} "
+                  f"max util={plan.max_usage_pct:.1f}%")
+        except deploy.DeploymentError as e:
+            why = str(e).split(":")[-1].strip()
+            print(f"  {dev.name:<5} infeasible ({why})")
+
+    print(f"\nPareto frontier across {len(DEVICE_CATALOG)} devices "
+          "(utilization ↓ / convs-per-step ↑ / quant error ↓):")
+    frontier = deploy.pareto_frontier(cfg, bm, DEVICE_CATALOG)
+    for p in sorted(frontier, key=lambda p: (p.device.cost,
+                                             p.max_usage_pct)):
+        bits = ",".join(f"d{d}c{c}" for d, c in p.bits())
+        print(f"  {p.device.name:<5} util={p.max_usage_pct:6.2f}%  "
+              f"convs/step={p.convs_per_step:.2f}  "
+              f"quant_err={p.quant_error:.4f}  "
+              f"blocks={'/'.join(p.block_names())}  bits={bits}")
+
+    dev, plan = deploy.select_device(
+        cfg, bm, bit_candidates=deploy.DEFAULT_BIT_CANDIDATES)
+    print(f"\nselected device: {dev.name} (cost {dev.cost}) — cheapest "
+          f"part fitting at {plan.target:.0%} target, per-layer "
+          "precision searched")
+    for a in plan.layers:
+        print(f"  layer {a.index}: {a.block} d={a.data_bits} "
+              f"c={a.coeff_bits} calls/fwd={a.calls}")
+
+    print("\nexecuting the plan (cnn_forward vs the integer oracle) and "
+          "re-tracing the deployed kernels:")
+    val = deploy.validate_plan(plan, cfg)
+    print(f"  bit-exact vs cnn_forward_ref: {val.bit_exact}")
+    print(f"  quantization error vs float oracle: {val.quant_error:.4f}")
+    print("\npredicted vs measured per budgeted resource "
+          "(paper §4.1 metrics, across layers):")
+    print(f"  {'resource':<12} {'FPGA':<5} {'MSE':>12} {'MAE':>12} "
+          f"{'R²':>8} {'MAPE%':>8}")
+    for r in BUDGET_RESOURCES:
+        m = val.metrics[r]
+        print(f"  {r:<12} {synth.fpga_name(r):<5} {m['mse']:>12.4g} "
+              f"{m['mae']:>12.4g} {m['r2']:>8.4f} {m['mape_pct']:>8.2f}")
+
+    assert val.bit_exact, "plan execution diverged from the oracle"
+    bad = {r: val.metrics[r]["mape_pct"] for r in BUDGET_RESOURCES
+           if val.metrics[r]["mape_pct"] > 20.0}
+    assert not bad, f"MAPE over 20% on {bad}"
+    print("\nall budgeted resource classes within 20% MAPE ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,3 +23,17 @@ class ConvSweepConfig:
 
 
 SWEEP = ConvSweepConfig()
+
+# Reduced sweep for CI's `-m sweep` job and the deployment planner's
+# end-to-end tests: one logic block + one dual-output MXU block over a
+# 6×6 bit grid — 72 kernel traces instead of 784.  The grid straddles
+# the int8/int16 container boundary with three points on each side so
+# the segmented container models still lock onto the step exactly (a
+# sparser grid lets a plain polynomial squeak past the R² gate and
+# mispredict by ~40% at the boundary).
+REDUCED_SWEEP = ConvSweepConfig(
+    name="paper-conv-sweep-reduced",
+    blocks=("conv1", "conv4"),
+    data_bits=(4, 6, 8, 10, 12, 16),
+    coeff_bits=(4, 6, 8, 10, 12, 16),
+)

@@ -18,14 +18,40 @@ relaxation (scipy linprog) + greedy integer rounding.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
 from scipy.optimize import linprog
 
 from repro.blocks import get_block
 from repro.core import polyfit, synth
+
+# the resource classes every device budgets (and every BlockModels fits)
+BUDGET_RESOURCES = ("hbm_bytes", "mxu_cost", "vmem_bytes", "vpu_ops")
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """One deployable part: a named budget vector plus a relative unit
+    cost — the TPU analogue of choosing among FPGA parts (ZCU104 vs a
+    bigger/smaller Zynq) in the paper's companion resource-driven flow.
+
+    ``budgets`` maps every resource in ``BUDGET_RESOURCES`` to the
+    device's capacity in the allocator's normalized units (rates per µs,
+    except ``vmem_bytes`` which is a capacity)."""
+
+    name: str
+    budgets: Mapping[str, float]
+    cost: float = 1.0              # relative unit price (v5e ≡ 1.0)
+    description: str = ""
+
+    def __post_init__(self):
+        missing = [r for r in BUDGET_RESOURCES if r not in self.budgets]
+        if missing:
+            raise ValueError(f"device {self.name!r} missing budgets for "
+                             f"{missing}")
+
 
 # v5e per-chip budgets in the allocator's normalized units
 V5E_BUDGETS = {
@@ -34,6 +60,52 @@ V5E_BUDGETS = {
     "hbm_bytes": 819e3,       # bytes/µs (819 GB/s)
     "vmem_bytes": 128 * 2**20,  # bytes (capacity)
 }
+
+V5E = DeviceProfile(
+    name="v5e", budgets=V5E_BUDGETS, cost=1.0,
+    description="TPU v5e chip — the mid-range baseline part")
+
+V5P = DeviceProfile(
+    name="v5p", cost=3.4,
+    budgets={
+        "mxu_cost": 229.5e6,      # 459 TFLOP/s bf16 peak
+        "vpu_ops": 6.0e6,
+        "hbm_bytes": 2765e3,      # 2765 GB/s
+        "vmem_bytes": 128 * 2**20,
+    },
+    description="TPU v5p chip — the large training part")
+
+EDGE = DeviceProfile(
+    name="edge", cost=0.2,
+    budgets={
+        "mxu_cost": 9.85e6,       # one-tenth of a v5e
+        "vpu_ops": 0.5e6,
+        "hbm_bytes": 102e3,
+        "vmem_bytes": 32 * 2**20,
+    },
+    description="constrained edge part — the ZCU104-class analogue")
+
+# cheapest first, so "first profile that fits" is also the cheapest fit
+DEVICE_CATALOG: Tuple[DeviceProfile, ...] = (EDGE, V5E, V5P)
+
+BudgetLike = Union[DeviceProfile, Mapping[str, float]]
+
+
+def get_device(name: str) -> DeviceProfile:
+    for dev in DEVICE_CATALOG:
+        if dev.name == name:
+            return dev
+    raise KeyError(f"unknown device {name!r}; catalog: "
+                   f"{[d.name for d in DEVICE_CATALOG]}")
+
+
+def as_budgets(budgets: Optional[BudgetLike]) -> Dict[str, float]:
+    """Coerce a DeviceProfile / budget mapping / None (→ v5e) to a dict."""
+    if budgets is None:
+        return dict(V5E_BUDGETS)
+    if isinstance(budgets, DeviceProfile):
+        return dict(budgets.budgets)
+    return dict(budgets)
 
 
 @dataclass
@@ -61,7 +133,7 @@ class BlockModels:
         for b in blocks:
             d, c, ys = synth.sweep_arrays(rows, b)
             models[b] = {res: polyfit.fit_auto(d, c, ys[res], block=b)
-                         for res in V5E_BUDGETS}
+                         for res in BUDGET_RESOURCES}
             try:
                 convs[b] = float(get_block(b).convs_per_step)
             except KeyError:
@@ -83,9 +155,10 @@ class Allocation:
 
 def allocate(bm: BlockModels, *, data_bits: int = 8, coeff_bits: int = 8,
              target: float = 0.8,
-             budgets: Optional[Dict[str, float]] = None,
-             only_block: Optional[str] = None) -> Allocation:
-    budgets = budgets or V5E_BUDGETS
+             budgets: Optional[BudgetLike] = None,
+             only_block: Optional[str] = None,
+             max_topup_rounds: int = 10_000) -> Allocation:
+    budgets = as_budgets(budgets)
     blocks = [only_block] if only_block else sorted(bm.models)
     res_names = sorted(budgets)
     A = np.array([[bm.demand(b, data_bits, coeff_bits)[r] for b in blocks]
@@ -93,17 +166,26 @@ def allocate(bm: BlockModels, *, data_bits: int = 8, coeff_bits: int = 8,
     ub = np.array([target * budgets[r] for r in res_names])
     objective = -np.array([bm.convs[b] for b in blocks])
 
-    lp = linprog(objective, A_ub=A, b_ub=ub, bounds=[(0, None)] * len(blocks),
-                 method="highs")
-    n = np.floor(lp.x + 1e-9).astype(int) if lp.success else \
-        np.zeros(len(blocks), int)
+    # Blocks whose predicted demand is ~0 on EVERY budgeted resource are
+    # excluded from both the LP and the greedy top-up: a free column with
+    # positive objective makes the LP unbounded (discarding its solution
+    # for every block), and the top-up would add the block forever.
+    nonzero = [i for i in range(len(blocks)) if np.any(A[:, i] > 1e-9)]
+    n = np.zeros(len(blocks), int)
+    if nonzero:
+        lp = linprog(objective[nonzero], A_ub=A[:, nonzero], b_ub=ub,
+                     bounds=[(0, None)] * len(nonzero), method="highs")
+        if lp.success:
+            n[nonzero] = np.floor(lp.x + 1e-9).astype(int)
 
-    # greedy top-up: add whichever block still fits and adds most convs
-    improved = True
-    while improved:
+    # greedy top-up: add whichever block still fits and adds most convs.
+    # The round cap is a backstop against demands so tiny that the top-up
+    # degenerates into counting to the budget one by one.
+    order = sorted(nonzero, key=lambda i: -bm.convs[blocks[i]])
+    improved, rounds = True, 0
+    while improved and rounds < max_topup_rounds:
         improved = False
-        order = sorted(range(len(blocks)),
-                       key=lambda i: -bm.convs[blocks[i]])
+        rounds += 1
         for i in order:
             trial = n.copy()
             trial[i] += 1

@@ -26,7 +26,7 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.blocks import BlockLike, ConvBlock, get_block, list_blocks
+from repro.blocks import BlockLike, ConvBlock, get_block
 from repro.core import allocate, synth
 from repro.kernels import conv2d
 from repro.kernels import ops
@@ -61,54 +61,42 @@ def quickstart_cnn_config() -> CNNConfig:
 
 def choose_blocks(cfg: CNNConfig, rows=None,
                   budgets=None) -> List[ConvBlock]:
-    """Model-driven block selection (paper §4.2): for each layer pick the
-    registered block that maximizes convolutions/step-per-resource under
-    the fitted models — conv pairs go to dual-output blocks while the MXU
-    budget lasts, the rest to logic/single-MXU blocks.  An explicit
-    ``ConvLayerSpec.block`` wins unconditionally."""
+    """Model-driven block selection (paper §4.2), now a thin wrapper over
+    the deployment planner (``repro.core.deploy``): each layer gets the
+    block the fitted models pick under the device budget at the layer's
+    spec bits.  An explicit ``ConvLayerSpec.block`` wins unconditionally,
+    and — matching the seed contract — selection never fails: a network
+    that overflows the device falls back to the least-demanding block
+    per overflowing layer instead of raising.  Use
+    ``deploy.plan_deployment`` directly for strict budget enforcement,
+    precision search, and the full plan (demand, utilization,
+    predicted-vs-measured validation)."""
+    from repro.core import deploy
     rows = rows if rows is not None else synth.run_sweep()
     bm = allocate.BlockModels.fit(rows)
-    budgets = dict(budgets or allocate.V5E_BUDGETS)
-    # seed preference order: dual-output blocks first (conv4, conv3,
-    # conv2, conv1); the last candidate is the logic fallback
-    candidates = sorted((get_block(n) for n in list_blocks()
-                         if n in bm.models),
-                        key=lambda blk: (blk.convs_per_step, blk.name),
-                        reverse=True)
-    fallback = candidates[-1]
-    chosen: List[ConvBlock] = []
-    remaining = {k: v * 0.8 for k, v in budgets.items()}
-    for spec in cfg.layers:
-        if spec.block is not None:
-            chosen.append(get_block(spec.block))
-            continue
-        best, best_score = fallback, -1.0
-        for blk in candidates:
-            if not blk.supports(spec.data_bits, spec.coeff_bits):
-                continue
-            demand = bm.demand(blk.name, spec.data_bits, spec.coeff_bits)
-            if any(demand[r] > remaining[r] for r in demand):
-                continue
-            score = bm.convs[blk.name] / (1e-12 + sum(
-                demand[r] / budgets[r] for r in demand))
-            if score > best_score:
-                best, best_score = blk, score
-        demand = bm.demand(best.name, spec.data_bits, spec.coeff_bits)
-        for r in demand:
-            remaining[r] = max(0.0, remaining[r] - demand[r])
-        chosen.append(best)
-    return chosen
+    plan = deploy.plan_deployment(cfg, bm, budgets, target=0.8,
+                                  on_infeasible="fallback")
+    return [get_block(a.block) for a in plan.layers]
 
 
-def init_cnn(key, cfg: CNNConfig):
+def init_cnn_float(key, cfg: CNNConfig):
+    """Per-layer float weight draws *before* coefficient quantization —
+    shared by ``init_cnn`` and the deployment planner's float oracle
+    (``deploy.quantization_error``), so the quantized network and its
+    quantization-free twin always start from the same weights."""
     params = []
     for i, spec in enumerate(cfg.layers):
         k = jax.random.fold_in(key, i)
         w = jax.random.normal(
             k, (spec.out_channels, spec.in_channels, 3, 3), jnp.float32)
         scale = (1 << (spec.coeff_bits - 2)) / 3.0
-        params.append(ops.quantize_fixed(w * scale, spec.coeff_bits))
+        params.append(w * scale)
     return params
+
+
+def init_cnn(key, cfg: CNNConfig):
+    return [ops.quantize_fixed(w, spec.coeff_bits)
+            for w, spec in zip(init_cnn_float(key, cfg), cfg.layers)]
 
 
 def _requantize(acc, spec: ConvLayerSpec):

@@ -402,9 +402,19 @@ def jaxpr_resources(fn, *args, **kwargs) -> Dict[str, float]:
                 sub_mult = mult * eqn.params.get("length", 1)
             elif prim == "pallas_call":
                 gm = eqn.params.get("grid_mapping")
+                grid = 1
                 for g in getattr(gm, "grid", ()) or ():
                     if isinstance(g, int):
                         sub_mult *= g
+                        grid *= g
+                # per-grid-step VMEM working set of the kernel as traced:
+                # operands staged whole + one output tile (capacity —
+                # max across kernels, not additive)
+                staged = (sum(_bytes(v.aval) for v in eqn.invars)
+                          + sum(_bytes(o.aval) for o in eqn.outvars)
+                          / max(grid, 1))
+                res["pallas_vmem_bytes"] = max(
+                    res.get("pallas_vmem_bytes", 0.0), staged)
             for pname in ("jaxpr", "call_jaxpr"):
                 sub = eqn.params.get(pname)
                 if sub is None:

@@ -46,22 +46,30 @@ def fpga_name(resource: str) -> str:
     return _FPGA_NAME.get(resource, resource)
 
 
-def _vmem_bytes(cfg: ConvSweepConfig, data_bits: int, coeff_bits: int,
-                n_out: int) -> float:
+def vmem_bytes(img_h: int, img_w: int, tile_h: int, data_bits: int,
+               coeff_bits: int, n_out: int) -> float:
     """Analytic BlockSpec working set: padded image + weights + out tile.
 
     The padded image is staged into VMEM in its *data container* dtype
     (int8 ≤ 8 bits, else int16 — kernels widen per-tile), so the image
     term scales with ``d_item``, the datapath-width ∝ memory effect the
     paper measures; weights likewise use the coeff container, while the
-    int32 output tile is width-independent."""
-    img_h = 4 * cfg.tile_h  # sweep image height (4 tiles)
+    int32 output tile is width-independent.  Geometry-parameterized so
+    the deployment planner (core/deploy.py) can evaluate the working set
+    at the deployed image size, not just the sweep image."""
     d_item = 1 if data_bits <= 8 else 2
     c_item = 1 if coeff_bits <= 8 else 2
-    img = (img_h + 2) * (cfg.tile_w + 2) * d_item   # container-width pad
+    img = (img_h + 2) * (img_w + 2) * d_item   # container-width pad
     wk = n_out * 9 * c_item
-    out = n_out * cfg.tile_h * cfg.tile_w * 4
+    out = n_out * tile_h * img_w * 4
     return float(img + wk + out)
+
+
+def _vmem_bytes(cfg: ConvSweepConfig, data_bits: int, coeff_bits: int,
+                n_out: int) -> float:
+    # sweep image: 4 row-tiles high, one tile wide
+    return vmem_bytes(4 * cfg.tile_h, cfg.tile_w, cfg.tile_h,
+                      data_bits, coeff_bits, n_out)
 
 
 def synth_one(block: BlockLike, data_bits: int, coeff_bits: int,

@@ -1,0 +1,125 @@
+"""Allocator hardening: greedy top-up termination + budget invariants."""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import allocate
+from repro.core.allocate import BUDGET_RESOURCES, DeviceProfile
+
+
+class _Const:
+    """Stand-in for a fitted PolyModel: predicts one constant value."""
+
+    def __init__(self, v):
+        self.v = float(v)
+
+    def predict(self, d, c):
+        return np.array([self.v])
+
+
+def _bm(demands, convs):
+    """BlockModels from literal per-block demand dicts (no sweep/fit)."""
+    models = {b: {r: _Const(res.get(r, 0.0)) for r in BUDGET_RESOURCES}
+              for b, res in demands.items()}
+    return allocate.BlockModels(models=models, convs=dict(convs))
+
+
+def test_zero_demand_block_terminates():
+    """Regression: a block predicting ~0 demand on every budgeted
+    resource used to make the greedy top-up loop spin forever (it always
+    'fit').  Zero-demand blocks are now skipped."""
+    bm = _bm({"free": {},                              # ~0 on everything
+              "real": {"mxu_cost": 1e6, "vpu_ops": 1e4,
+                       "hbm_bytes": 1e4, "vmem_bytes": 1e6}},
+             {"free": 2.0, "real": 1.0})
+    alloc = allocate.allocate(bm, target=0.8)
+    assert alloc.counts["free"] == 0          # not packed to infinity
+    assert alloc.counts["real"] > 0
+    for pct in alloc.usage_pct.values():
+        assert pct <= 80.0 + 1e-6
+
+
+def test_zero_demand_only_block_terminates():
+    bm = _bm({"free": {}}, {"free": 1.0})
+    alloc = allocate.allocate(bm, only_block="free", target=0.8)
+    assert alloc.counts["free"] == 0
+    assert alloc.total_convs == 0.0
+
+
+def test_lp_survives_zero_demand_block():
+    """The zero-demand column must be dropped from the LP too: a free
+    column with positive objective makes linprog unbounded, which used
+    to throw away the LP solution for every other block."""
+    bm = _bm({"free": {}, "real": {"vpu_ops": 1.0}},
+             {"free": 2.0, "real": 1.0})
+    alloc = allocate.allocate(bm, target=0.8)
+    assert alloc.counts["free"] == 0
+    # far beyond what the round-capped greedy alone could reach
+    assert alloc.counts["real"] >= 1_000_000
+    assert alloc.usage_pct["vpu_ops"] <= 80.0 + 1e-6
+
+
+def test_topup_round_cap():
+    """Sub-resolution demands terminate via the round cap backstop."""
+    bm = _bm({"tiny": {"vpu_ops": 1e-6}}, {"tiny": 1.0})
+    alloc = allocate.allocate(bm, only_block="tiny", target=0.8,
+                              max_topup_rounds=5)
+    assert alloc.counts["tiny"] >= 0          # terminated, that's the point
+
+
+# ---------------------------------------------------------------------------
+# property: allocations never exceed target × budget (any resource)
+# ---------------------------------------------------------------------------
+
+_frac = st.floats(min_value=0.0, max_value=2.0) if HAVE_HYPOTHESIS else None
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    fracs=st.lists(st.lists(_frac, min_size=4, max_size=4),
+                   min_size=1, max_size=4),
+    convs=st.lists(st.floats(min_value=0.5, max_value=4.0),
+                   min_size=4, max_size=4),
+    data_bits=st.integers(min_value=3, max_value=16),
+    coeff_bits=st.integers(min_value=3, max_value=16),
+    target=st.floats(min_value=0.05, max_value=0.95),
+)
+def test_allocate_never_exceeds_budget(fracs, convs, data_bits, coeff_bits,
+                                       target):
+    budgets = dict(allocate.V5E_BUDGETS)
+    demands = {
+        f"b{i}": {r: f * budgets[r]
+                  for r, f in zip(sorted(BUDGET_RESOURCES), row)}
+        for i, row in enumerate(fracs)
+    }
+    bm = _bm(demands, {f"b{i}": convs[i % len(convs)]
+                       for i in range(len(fracs))})
+    alloc = allocate.allocate(bm, data_bits=data_bits,
+                              coeff_bits=coeff_bits, target=target)
+    for r, pct in alloc.usage_pct.items():
+        assert pct <= 100.0 * target + 1e-4, (r, pct, target)
+
+
+def test_allocate_accepts_device_profile():
+    bm = _bm({"real": {"mxu_cost": 1e6, "vpu_ops": 1e4,
+                       "hbm_bytes": 1e4, "vmem_bytes": 1e6}},
+             {"real": 1.0})
+    a_dict = allocate.allocate(bm, budgets=allocate.V5E_BUDGETS)
+    a_dev = allocate.allocate(bm, budgets=allocate.V5E)
+    assert a_dict.counts == a_dev.counts
+
+
+def test_device_catalog_well_formed():
+    names = [d.name for d in allocate.DEVICE_CATALOG]
+    assert len(names) >= 3 and len(set(names)) == len(names)
+    assert [d.cost for d in allocate.DEVICE_CATALOG] == sorted(
+        d.cost for d in allocate.DEVICE_CATALOG)
+    for dev in allocate.DEVICE_CATALOG:
+        assert set(dev.budgets) >= set(BUDGET_RESOURCES)
+        assert allocate.get_device(dev.name) is dev
+    with pytest.raises(KeyError, match="zcu104"):
+        allocate.get_device("zcu104")
+    with pytest.raises(ValueError, match="missing budgets"):
+        DeviceProfile(name="bad", budgets={"mxu_cost": 1.0})

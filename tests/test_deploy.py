@@ -1,0 +1,249 @@
+"""Deployment planner: per-layer precision/block search over the device
+catalog, Pareto frontier, device selection, predicted-vs-measured."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_conv import REDUCED_SWEEP
+from repro.core import allocate, deploy, synth
+from repro.core.allocate import (BUDGET_RESOURCES, DEVICE_CATALOG,
+                                 DeviceProfile)
+from repro.core.cnn import (CNNConfig, ConvLayerSpec, choose_blocks,
+                            quickstart_cnn_config)
+
+
+@pytest.fixture(scope="module")
+def rows():
+    return synth.run_sweep()   # cached JSON after the first run
+
+
+@pytest.fixture(scope="module")
+def bm(rows):
+    return allocate.BlockModels.fit(rows)
+
+
+def _small_cfg():
+    """Small enough to fit the constrained edge profile."""
+    return CNNConfig(layers=(
+        ConvLayerSpec(1, 2, data_bits=8, coeff_bits=6),
+        ConvLayerSpec(2, 2, data_bits=6, coeff_bits=4),
+    ), img_h=16, img_w=128)
+
+
+NANO = DeviceProfile(name="nano", cost=0.01,
+                     budgets={r: 1.0 for r in BUDGET_RESOURCES})
+
+
+# ---------------------------------------------------------------------------
+# plans respect per-device budgets
+# ---------------------------------------------------------------------------
+
+def test_plans_respect_budgets(bm):
+    cfg = quickstart_cnn_config()
+    feasible = 0
+    for dev in DEVICE_CATALOG:
+        try:
+            plan = deploy.plan_deployment(
+                cfg, bm, dev, bit_candidates=deploy.DEFAULT_BIT_CANDIDATES)
+        except deploy.DeploymentError:
+            continue
+        feasible += 1
+        assert plan.feasible
+        for r in BUDGET_RESOURCES:
+            assert plan.demand[r] <= plan.target * dev.budgets[r] + 1e-6, \
+                (dev.name, r)
+            assert plan.usage_pct[r] <= 100 * plan.target + 1e-6
+        # plan totals are consistent with the per-layer assignments
+        for r in deploy.RATE_RESOURCES:
+            assert plan.demand[r] == pytest.approx(
+                sum(a.demand[r] for a in plan.layers))
+    assert feasible >= 1
+
+
+def test_layer_demand_scales_with_calls(bm):
+    """Rate demand is per-call × calls × grid ratio: doubling out_ch
+    doubles it, halving the image height halves it."""
+    s1 = ConvLayerSpec(4, 4, data_bits=8, coeff_bits=8)
+    s2 = ConvLayerSpec(4, 8, data_bits=8, coeff_bits=8)
+    d1 = deploy.predict_layer_demand(bm, "conv2", 8, 8, s1, 64, 128)
+    d2 = deploy.predict_layer_demand(bm, "conv2", 8, 8, s2, 64, 128)
+    dh = deploy.predict_layer_demand(bm, "conv2", 8, 8, s1, 32, 128)
+    for r in deploy.RATE_RESOURCES:
+        assert d2[r] == pytest.approx(2 * d1[r])
+        assert dh[r] == pytest.approx(d1[r] / 2)
+    # vmem is a capacity — independent of the channel count
+    assert d2["vmem_bytes"] == pytest.approx(d1["vmem_bytes"])
+
+
+# ---------------------------------------------------------------------------
+# explicit overrides win
+# ---------------------------------------------------------------------------
+
+def test_explicit_overrides_win(bm):
+    cfg = CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=5, coeff_bits=5, block="conv1"),
+        ConvLayerSpec(4, 4, data_bits=8, coeff_bits=6),
+    ), img_h=16, img_w=128)
+    plan = deploy.plan_deployment(
+        cfg, bm, allocate.V5P, bit_candidates=deploy.DEFAULT_BIT_CANDIDATES)
+    # pinned layer keeps block AND bits, even with the bit search open
+    assert plan.layers[0].block == "conv1"
+    assert (plan.layers[0].data_bits, plan.layers[0].coeff_bits) == (5, 5)
+    # the free layer is searched: its bits come from the candidate set
+    assert (plan.layers[1].data_bits,
+            plan.layers[1].coeff_bits) in deploy.DEFAULT_BIT_CANDIDATES
+    # and choose_blocks (the thin wrapper) honors the same pin
+    blocks = choose_blocks(cfg)
+    assert blocks[0].name == "conv1"
+
+
+def test_pinned_unmodeled_block(bm):
+    """A pin on a registered block the sweep never modeled: strict mode
+    raises, but choose_blocks keeps the seed's never-fail contract."""
+    from repro.blocks import Conv2Block, register_block, unregister_block
+    register_block(Conv2Block(name="conv2_pin", convs_per_step=1,
+                              dual_output=False))
+    try:
+        cfg = CNNConfig(layers=(
+            ConvLayerSpec(1, 2, data_bits=8, coeff_bits=6,
+                          block="conv2_pin"),), img_h=16, img_w=128)
+        with pytest.raises(deploy.DeploymentError, match="pins block"):
+            deploy.plan_deployment(cfg, bm, allocate.V5P)
+        plan = deploy.plan_deployment(cfg, bm, allocate.V5P,
+                                      on_infeasible="fallback")
+        assert plan.layers[0].block == "conv2_pin"
+        assert not plan.feasible
+        assert choose_blocks(cfg)[0].name == "conv2_pin"
+    finally:
+        unregister_block("conv2_pin")
+
+
+def test_spec_bits_pinned_without_candidates(bm):
+    """bit_candidates=None → every layer keeps its spec bits."""
+    cfg = quickstart_cnn_config()
+    plan = deploy.plan_deployment(cfg, bm, allocate.V5P)
+    assert plan.bits() == [(s.data_bits, s.coeff_bits) for s in cfg.layers]
+
+
+def test_empty_config(bm):
+    """Zero-layer networks plan to an empty, feasible, zero-demand plan
+    (the seed's choose_blocks returned [])."""
+    cfg = CNNConfig(layers=())
+    plan = deploy.plan_deployment(cfg, bm, allocate.V5E)
+    assert plan.layers == () and plan.feasible
+    assert plan.max_usage_pct == 0.0
+    assert choose_blocks(cfg) == []
+
+
+# ---------------------------------------------------------------------------
+# infeasible budgets
+# ---------------------------------------------------------------------------
+
+def test_infeasible_raises_clear_error(bm):
+    cfg = _small_cfg()
+    with pytest.raises(deploy.DeploymentError, match="does not fit"):
+        deploy.plan_deployment(cfg, bm, NANO)
+    with pytest.raises(deploy.DeploymentError, match="nano"):
+        deploy.plan_deployment(cfg, bm, NANO)
+
+
+def test_infeasible_fallback_marks_plan(bm):
+    plan = deploy.plan_deployment(_small_cfg(), bm, NANO,
+                                  on_infeasible="fallback")
+    assert not plan.feasible
+    assert len(plan.layers) == 2
+    # choose_blocks preserves the seed contract: selection never raises
+    blocks = choose_blocks(_small_cfg(), budgets=NANO.budgets)
+    assert len(blocks) == 2
+
+
+def test_select_device_none_fits(bm):
+    with pytest.raises(deploy.DeploymentError, match="no device"):
+        deploy.select_device(_small_cfg(), bm, catalog=[NANO])
+
+
+# ---------------------------------------------------------------------------
+# device selection
+# ---------------------------------------------------------------------------
+
+def test_select_device_cheapest_fit(bm):
+    dev, plan = deploy.select_device(_small_cfg(), bm)
+    assert plan.feasible
+    # the selected device is the cheapest whose plan fits
+    for other in DEVICE_CATALOG:
+        if other.cost >= dev.cost or other.name == dev.name:
+            continue
+        with pytest.raises(deploy.DeploymentError):
+            deploy.plan_deployment(_small_cfg(), bm, other)
+    # a bigger net needs a bigger part than the small one
+    big_dev, _ = deploy.select_device(quickstart_cnn_config(), bm)
+    assert big_dev.cost >= dev.cost
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier
+# ---------------------------------------------------------------------------
+
+def test_pareto_frontier_non_dominated(bm):
+    frontier = deploy.pareto_frontier(
+        quickstart_cnn_config(), bm,
+        bit_candidates=((6, 4), (8, 6), (8, 8), (12, 10)))
+    assert frontier
+    for p in frontier:
+        assert p.feasible
+        assert p.quant_error is not None
+    for a in frontier:
+        for b in frontier:
+            if a is not b:
+                assert not deploy._dominates(a, b), (
+                    a.device.name, a.bits(), b.device.name, b.bits())
+
+
+def test_pareto_filter_drops_dominated(bm):
+    cfg = _small_cfg()
+    good = deploy.plan_deployment(cfg, bm, allocate.V5P)
+    good.quant_error = 0.1
+    worse = deploy.plan_deployment(cfg, bm, allocate.V5P)
+    worse.quant_error = 0.5
+    worse.usage_pct = {r: v + 1.0 for r, v in worse.usage_pct.items()}
+    worse.convs_per_step = good.convs_per_step - 0.1
+    kept = deploy.pareto_filter([good, worse])
+    assert kept == [good]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on a reduced sweep (CI: the dedicated -m sweep job)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def reduced_rows(tmp_path_factory):
+    """One fresh reduced-sweep trace shared by the sweep-marked tests
+    (the 72 traces dominate the CI sweep job's cost)."""
+    cache = tmp_path_factory.mktemp("sweep") / "reduced.json"
+    return synth.run_sweep(REDUCED_SWEEP, cache_path=cache, force=True)
+
+
+@pytest.mark.sweep
+def test_predicted_vs_measured_reduced_sweep(reduced_rows):
+    """The §4.1 loop on a fresh reduced sweep: fit models, plan, execute
+    bit-exactly, and the models must predict the re-traced resources to
+    ≤ 20% MAPE on every budgeted resource class."""
+    bm = allocate.BlockModels.fit(reduced_rows)
+    cfg = quickstart_cnn_config()
+    dev, plan = deploy.select_device(cfg, bm)
+    val = deploy.validate_plan(plan, cfg)
+    assert val.bit_exact
+    for r in BUDGET_RESOURCES:
+        assert val.metrics[r]["mape_pct"] <= 20.0, (r, val.metrics[r])
+        assert np.all(val.measured[r] >= 0)
+    assert 0.0 <= val.quant_error
+
+
+@pytest.mark.sweep
+def test_frontier_reduced_sweep(reduced_rows):
+    bm = allocate.BlockModels.fit(reduced_rows)
+    frontier = deploy.pareto_frontier(
+        _small_cfg(), bm, bit_candidates=((6, 4), (8, 8)))
+    assert frontier
+    devices = {p.device.name for p in frontier}
+    assert devices <= {d.name for d in DEVICE_CATALOG}

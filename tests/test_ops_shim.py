@@ -1,0 +1,45 @@
+"""The deprecated ``ops.conv_block`` / ``ops.conv_block_ref`` shims: they
+must warn, preserve the seed's ValueError contract for unknown names, and
+stay bit-exact with the registry path they wrap."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.blocks import get_block
+from repro.kernels import ops
+
+
+def _xw(block="conv2", bits=8):
+    rng = np.random.default_rng(7)
+    x = ops.quantize_fixed(
+        jnp.asarray(rng.integers(-100, 100, (16, 128)), jnp.float32), bits)
+    shape = get_block(block).weight_shape(bits)
+    w = ops.quantize_fixed(
+        jnp.asarray(rng.integers(-100, 100, shape), jnp.float32), bits)
+    return x, w
+
+
+@pytest.mark.parametrize("name", ["conv1", "conv3"])
+def test_conv_block_warns_and_matches_registry(name):
+    x, w = _xw(name)
+    with pytest.warns(DeprecationWarning, match="conv_block is deprecated"):
+        y = ops.conv_block(name, x, w, data_bits=8, coeff_bits=8)
+    yr = get_block(name).apply(x, w, data_bits=8, coeff_bits=8)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_conv_block_unknown_name_raises_value_error():
+    x, w = _xw()
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="unknown block 'conv99'"):
+            ops.conv_block("conv99", x, w, data_bits=8, coeff_bits=8)
+
+
+def test_conv_block_ref_warns_and_matches():
+    x, w = _xw("conv4")
+    with pytest.warns(DeprecationWarning,
+                      match="conv_block_ref is deprecated"):
+        y = ops.conv_block_ref("conv4", x, w)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(get_block("conv4").reference(x, w)))

@@ -1,0 +1,74 @@
+"""Golden regression for the synthesis sweep: the resource vectors every
+downstream model is fitted on must not drift silently when kernels or the
+hloscan census change.  If a change is *intentional*, regenerate the
+fixture (see tests/golden/synth_golden.json) and bump
+``synth.SWEEP_SCHEMA_VERSION``."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs.paper_conv import SWEEP, ConvSweepConfig
+from repro.core import synth
+
+GOLDEN = Path(__file__).parent / "golden" / "synth_golden.json"
+
+
+def _golden():
+    return json.loads(GOLDEN.read_text())
+
+
+def test_golden_fixture_matches_schema_version():
+    assert _golden()["version"] == synth.SWEEP_SCHEMA_VERSION, (
+        "SWEEP_SCHEMA_VERSION changed — regenerate the golden fixture "
+        "to match the new row semantics")
+
+
+@pytest.mark.parametrize("i", range(6), ids=lambda i: f"row{i}")
+def test_synth_traces_match_golden(i):
+    row = _golden()["rows"][i]
+    got = synth.synth_one(row["block"], row["data_bits"], row["coeff_bits"],
+                          SWEEP)
+    for key, want in row.items():
+        if key in ("block", "data_bits", "coeff_bits"):
+            continue
+        assert got[key] == pytest.approx(want, rel=1e-6), (
+            row["block"], row["data_bits"], row["coeff_bits"], key)
+
+
+# ---------------------------------------------------------------------------
+# SWEEP_SCHEMA_VERSION cache regeneration
+# ---------------------------------------------------------------------------
+
+TINY = ConvSweepConfig(name="tiny", blocks=("conv1",),
+                       data_bits=(4,), coeff_bits=(4,))
+
+
+def test_stale_cache_regenerates(tmp_path):
+    cache = tmp_path / "synth.json"
+    stale = [{"block": "conv1", "data_bits": 4, "coeff_bits": 4,
+              "vpu_ops": -1.0}]
+    # pre-versioning bare-list payload → regenerated
+    cache.write_text(json.dumps(stale))
+    rows = synth.run_sweep(TINY, cache_path=cache)
+    assert rows[0]["vpu_ops"] > 0
+    payload = json.loads(cache.read_text())
+    assert payload["version"] == synth.SWEEP_SCHEMA_VERSION
+
+    # wrong version number → regenerated too
+    cache.write_text(json.dumps({"version": synth.SWEEP_SCHEMA_VERSION - 1,
+                                 "rows": stale}))
+    rows = synth.run_sweep(TINY, cache_path=cache)
+    assert rows[0]["vpu_ops"] > 0
+
+    # current version → served verbatim, no re-trace
+    sentinel = [{"block": "conv1", "data_bits": 4, "coeff_bits": 4,
+                 "vpu_ops": 123.0}]
+    cache.write_text(json.dumps({"version": synth.SWEEP_SCHEMA_VERSION,
+                                 "rows": sentinel}))
+    assert synth.run_sweep(TINY, cache_path=cache) == sentinel
+
+    # force=True ignores even a current cache
+    rows = synth.run_sweep(TINY, cache_path=cache, force=True)
+    assert rows[0]["vpu_ops"] > 0
