@@ -1,0 +1,98 @@
+"""Batched multi-image CNN serving throughput (the (N, H, W, C) win).
+
+Runs the quickstart CNN with planner-chosen blocks two ways per batch
+size N ∈ {1, 4, 16}:
+
+  sequential — N jitted single-image ``cnn_forward`` calls, one per
+               image (the pre-batching serving baseline)
+  batched    — ONE jitted ``cnn_forward`` call on the (N, H, W, C)
+               batch, every layer a single fused batched kernel (the
+               ``serve.cnn_engine`` step)
+
+Every batch size is verified bit-exact against the per-image
+``cnn_forward_ref`` oracle before timing.  Besides the usual CSV rows,
+``run`` records the trajectory point ``BENCH_cnn_serve.json``
+(images/sec per batch size, device count, and the headline
+batched-N=16-vs-sequential speedup) for CI to upload.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.cnn import (choose_blocks, cnn_forward, cnn_forward_ref,
+                            init_cnn, quickstart_cnn_config)
+from repro.kernels import ops
+
+BATCH_SIZES = (1, 4, 16)
+JSON_PATH = "BENCH_cnn_serve.json"
+
+
+def run(json_path: str | Path = JSON_PATH) -> dict:
+    cfg = quickstart_cnn_config()
+    blocks = choose_blocks(cfg)
+    names = "+".join(b.name for b in blocks)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    n_max = max(BATCH_SIZES)
+    xs = ops.quantize_fixed(
+        jnp.asarray(rng.integers(0, 100, (n_max, cfg.img_h, cfg.img_w, 1)),
+                    jnp.float32), 8)
+
+    fwd = jax.jit(lambda p, x: cnn_forward(p, x, cfg, blocks))
+
+    results = []
+    for n in BATCH_SIZES:
+        xb = xs[:n]
+        # bit-exactness first: batched forward vs the per-image oracle
+        yb = np.asarray(fwd(params, xb))
+        yr = np.asarray(cnn_forward_ref(params, xb, cfg))
+        assert (yb == yr).all(), \
+            f"batched N={n} forward diverged from the oracle"
+
+        def sequential(xb=xb, n=n):
+            return [fwd(params, xb[i]) for i in range(n)]
+
+        us_seq = time_call(lambda: sequential()[-1], iters=3)
+        us_batched = time_call(lambda: fwd(params, xb), iters=3)
+        results.append({
+            "batch": n,
+            "us_batched": us_batched,
+            "us_sequential": us_seq,
+            "images_per_sec_batched": n / us_batched * 1e6,
+            "images_per_sec_sequential": n / us_seq * 1e6,
+        })
+        emit(f"cnn_serve/batched_n{n}", us_batched,
+             f"blocks={names};images_per_s={n / us_batched * 1e6:.0f}")
+        emit(f"cnn_serve/sequential_n{n}", us_seq,
+             f"images_per_s={n / us_seq * 1e6:.0f}")
+
+    # headline: one batched N=16 step vs 16 sequential N=1 calls
+    seq1 = results[0]["images_per_sec_sequential"]
+    big = results[-1]["images_per_sec_batched"]
+    speedup = big / seq1
+    emit("cnn_serve/speedup_n16", 0.0,
+         f"batched_n16_vs_n1_sequential={speedup:.2f}x")
+
+    payload = {
+        "bench": "cnn_serve",
+        "schema": 1,
+        "blocks": [b.name for b in blocks],
+        "device_count": len(jax.devices()),
+        "batch_sizes": list(BATCH_SIZES),
+        "results": results,
+        "speedup_n16_vs_sequential": speedup,
+    }
+    Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 
 def main() -> None:
-    from benchmarks import (cnn_forward_bench, deploy_bench,
+    from benchmarks import (cnn_forward_bench, cnn_serve_bench, deploy_bench,
                             model_dse_bench, roofline_bench, table2_blocks,
                             table3_corr, table4_models, table5_alloc)
     print("name,us_per_call,derived")
@@ -14,6 +14,7 @@ def main() -> None:
     table4_models.run()
     table5_alloc.run()
     cnn_forward_bench.run()
+    cnn_serve_bench.run()      # also writes BENCH_cnn_serve.json
     deploy_bench.run()
     roofline_bench.run()
     model_dse_bench.run()

@@ -10,7 +10,8 @@ Importing the package registers the paper's four blocks (conv1..conv4).
 See docs/blocks.md for the API reference and a custom-block example.
 """
 
-from repro.blocks.base import BIT_RANGE, ConvBlock
+from repro.blocks.base import (BIT_RANGE, ConvBlock, fused_dot_layer,
+                               packed_dot_layer)
 from repro.blocks.paper import (CONV1, CONV2, CONV3, CONV4, Conv1Block,
                                 Conv2Block, Conv3Block, Conv4Block)
 from repro.blocks.registry import (BlockLike, get_block, list_blocks,
@@ -20,5 +21,6 @@ __all__ = [
     "BIT_RANGE", "BlockLike", "ConvBlock",
     "CONV1", "CONV2", "CONV3", "CONV4",
     "Conv1Block", "Conv2Block", "Conv3Block", "Conv4Block",
+    "fused_dot_layer", "packed_dot_layer",
     "get_block", "list_blocks", "register_block", "unregister_block",
 ]

@@ -25,6 +25,17 @@ final channel is duplicated into the pair and its twin discarded), and
 the int32 accumulation is exact, so results stay bit-identical to the
 scalar reference.
 
+``apply_batched`` also accepts a whole (N, H, W, in_ch) *image batch* —
+the multi-image serving hot path.  The batch goes through
+``batched_layer``: the default is an outer ``jax.vmap`` over the
+single-image path (still one compiled executable per layer), and the
+MXU dot blocks override it with a layer-fused formulation of the same
+integer arithmetic (``fused_dot_layer`` / ``packed_dot_layer``) that
+shares the im2col across output channels and widens the dot over the
+batch — the throughput win behind ``repro.serve.cnn_engine``.  Every
+path returns the exact int32 accumulator, bit-identical to the
+reference.
+
 Concrete subclasses (``repro.blocks.paper``) provide ``kernel_body``
 and register themselves in the registry (``repro.blocks.registry``).
 """
@@ -117,25 +128,49 @@ class ConvBlock:
     def apply_batched(self, x, w, *, data_bits: int, coeff_bits: int,
                       tile_h: int = 16, interpret: bool = True):
         """One CNN layer in a single jitted call.  x: (H, W, in_ch)
-        container int; w: (out_ch, in_ch, 3, 3).  Returns the exact int32
-        accumulator (out_ch, H, W) = Σ_ic conv(x[..,ic], w[oc,ic]) — the
-        caller applies its own rescale/activation."""
+        container int, or an (N, H, W, in_ch) image batch; w: (out_ch,
+        in_ch, 3, 3).  Returns the exact int32 accumulator (out_ch, H, W)
+        — or (N, out_ch, H, W) — = Σ_ic conv(x[..,ic], w[oc,ic]); the
+        caller applies its own rescale/activation.  Batched inputs run
+        through ``batched_layer`` (one compiled executable per layer)."""
+        if x.ndim not in (3, 4):
+            raise ValueError(
+                f"{self.name}: expected (H, W, in_ch) or (N, H, W, in_ch), "
+                f"got shape {tuple(x.shape)}")
         if not self.supports(data_bits, coeff_bits):
             raise ValueError(
                 f"{self.name}: unsupported design point "
                 f"(data_bits={data_bits}, coeff_bits={coeff_bits})")
         if w.ndim != 4 or tuple(w.shape[2:]) != (3, 3) \
-                or w.shape[1] != x.shape[2]:
+                or w.shape[1] != x.shape[-1]:
             raise ValueError(
-                f"{self.name}: expected weights (out_ch, in_ch={x.shape[2]},"
+                f"{self.name}: expected weights (out_ch, in_ch={x.shape[-1]},"
                 f" 3, 3), got {tuple(w.shape)}")
-        if x.shape[0] % tile_h:
+        if x.shape[-3] % tile_h:
             raise ValueError(
-                f"{self.name}: image height {x.shape[0]} not divisible by "
+                f"{self.name}: image height {x.shape[-3]} not divisible by "
                 f"tile_h={tile_h}")
+        if x.ndim == 4:
+            return _apply_batched_n(self, x, w, data_bits=data_bits,
+                                    coeff_bits=coeff_bits, tile_h=tile_h,
+                                    interpret=interpret)
         return _apply_batched(self, x, w, data_bits=data_bits,
                               coeff_bits=coeff_bits, tile_h=tile_h,
                               interpret=interpret)
+
+    def batched_layer(self, x, w, *, data_bits: int, coeff_bits: int,
+                      tile_h: int = 16, interpret: bool = True):
+        """Whole-batch layer execution: x (N, H, W, in_ch) → exact int32
+        (N, out_ch, H, W).  Default: outer ``jax.vmap`` over the
+        single-image plane-vmapped path — correct for any block.  The
+        MXU dot blocks override this with a layer-fused dot that shares
+        the im2col across output channels and the batch (bit-identical
+        integer math); the multiply-free Conv1 keeps the default."""
+        def one(img):
+            return _apply_batched(self, img, w, data_bits=data_bits,
+                                  coeff_bits=coeff_bits, tile_h=tile_h,
+                                  interpret=interpret)
+        return jax.vmap(one)(x)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -177,3 +212,76 @@ def _apply_batched(block: ConvBlock, x, w, *, data_bits, coeff_bits,
     y = f(planes, wp)                                  # (p, ic, 2, H, W)
     acc = jnp.sum(y, axis=1)                           # (p, 2, H, W)
     return acc.reshape(pairs * 2, h, wd)[:out_ch]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block", "data_bits", "coeff_bits", "tile_h", "interpret"))
+def _apply_batched_n(block: ConvBlock, x, w, *, data_bits, coeff_bits,
+                     tile_h, interpret):
+    return block.batched_layer(x, w, data_bits=data_bits,
+                               coeff_bits=coeff_bits, tile_h=tile_h,
+                               interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# layer-fused batched paths for the MXU dot blocks
+#
+# Same integer arithmetic as the per-plane kernels — int8/int16 products
+# widen exactly into int32 and int32 accumulation is order-independent
+# (mod 2^32), so both formulations are bit-identical to the reference —
+# but the im2col is built once per input plane instead of once per
+# (out_ch, in_ch) call, and the dot contracts over all taps × input
+# channels for every output channel and image at once.
+# ---------------------------------------------------------------------------
+
+def _layer_taps(x):
+    """(N, H, W, ic) → 'same'-padded tap stack (N, H, W, ic, 9)."""
+    n, h, wd, ic = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    return jnp.stack([xp[:, di:di + h, dj:dj + wd, :]
+                      for di in range(3) for dj in range(3)], axis=-1)
+
+
+def fused_dot_layer(x, w, *, data_bits: int, coeff_bits: int):
+    """One integer dot for the whole layer: x (N, H, W, ic) container
+    int, w (oc, ic, 3, 3) → exact int32 (N, oc, H, W).  The batched
+    widening of the Conv2/Conv4 im2col-plus-dot step (operands stay in
+    the kernels' dot dtype, so int8×int8 products keep the native MXU
+    rate)."""
+    n, h, wd, ic = x.shape
+    oc = w.shape[0]
+    ddt = conv2d._dot_dtype(data_bits, coeff_bits)
+    pat = _layer_taps(x).astype(ddt).reshape(n, h * wd, ic * 9)
+    wm = w.transpose(1, 2, 3, 0).reshape(ic * 9, oc).astype(ddt)
+    y = jax.lax.dot_general(pat, wm, (((2,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+    return y.reshape(n, h, wd, oc).transpose(0, 3, 1, 2)
+
+
+def packed_dot_layer(x, w, *, data_bits: int, coeff_bits: int):
+    """Conv3's operand packing, layer-fused: coefficient pairs share one
+    int32 dot column (w_hi·2^S + w_lo), halving the dot width.  The
+    S-bit field split must happen per 9-tap convolution — before the
+    cross-plane sum — so the contraction runs per input channel and the
+    unpacked halves accumulate afterwards (exact int32, bit-identical
+    to the per-plane packed kernel)."""
+    n, h, wd, ic = x.shape
+    oc = w.shape[0]
+    s = conv2d._pack_shift(data_bits, coeff_bits)
+    if oc % 2:                      # odd tail: duplicate + discard twin
+        w = jnp.concatenate([w, w[-1:]], axis=0)
+    pairs = w.shape[0] // 2
+    wk = w.astype(jnp.int32).reshape(pairs, 2, ic, 9)
+    packed = (wk[:, 0] << s) + wk[:, 1]                # (pairs, ic, 9)
+    pat = _layer_taps(x).astype(jnp.int32) \
+        .transpose(0, 3, 1, 2, 4).reshape(n, ic, h * wd, 9)
+    acc = jax.lax.dot_general(                         # (ic, n, HW, pairs)
+        pat, packed.transpose(1, 2, 0),
+        (((3,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.int32)
+    half = jnp.int32(1 << (s - 1))
+    lo = ((acc + half) & ((1 << s) - 1)) - half        # signed low field
+    hi = (acc - lo) >> s
+    out = jnp.stack([jnp.sum(hi, axis=0), jnp.sum(lo, axis=0)], axis=-1)
+    return out.reshape(n, h * wd, pairs * 2)[..., :oc] \
+        .reshape(n, h, wd, oc).transpose(0, 3, 1, 2)

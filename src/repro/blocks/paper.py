@@ -4,6 +4,14 @@ Each class pairs the block's metadata (convolutions per step, dual
 output, packing regime) with its Pallas kernel body from
 ``repro.kernels.conv2d``; instances are registered at import so
 ``get_block("conv1")`` etc. work everywhere.
+
+The MXU dot blocks additionally override ``batched_layer`` — the
+(N, H, W, C) serving hot path — with the layer-fused formulations from
+``repro.blocks.base``: Conv2/Conv4 widen their im2col-plus-dot across
+output channels and the batch, Conv3 keeps its operand-packing identity
+(two convolutions per dot column) inside the fused dot while packing is
+valid.  Conv1 is multiply-free by construction, so it inherits the
+outer-vmap default.
 """
 
 from __future__ import annotations
@@ -11,7 +19,7 @@ from __future__ import annotations
 import functools
 from dataclasses import dataclass
 
-from repro.blocks.base import ConvBlock
+from repro.blocks.base import ConvBlock, fused_dot_layer, packed_dot_layer
 from repro.blocks.registry import register_block
 from repro.kernels import conv2d
 
@@ -38,6 +46,11 @@ class Conv2Block(ConvBlock):
         return _partial(conv2d.conv2_kernel, tile_h=tile_h, w=w,
                         data_bits=data_bits, coeff_bits=coeff_bits)
 
+    def batched_layer(self, x, w, *, data_bits, coeff_bits, tile_h=16,
+                      interpret=True):
+        return fused_dot_layer(x, w, data_bits=data_bits,
+                               coeff_bits=coeff_bits)
+
 
 @dataclass(frozen=True)
 class Conv3Block(ConvBlock):
@@ -53,6 +66,16 @@ class Conv3Block(ConvBlock):
         return _partial(conv2d.conv3_kernel, tile_h=tile_h, w=w,
                         data_bits=data_bits, coeff_bits=coeff_bits)
 
+    def batched_layer(self, x, w, *, data_bits, coeff_bits, tile_h=16,
+                      interpret=True):
+        if self.packed_ok(data_bits, coeff_bits):
+            return packed_dot_layer(x, w, data_bits=data_bits,
+                                    coeff_bits=coeff_bits)
+        # outside the packing regime the kernel degrades to two dots —
+        # exactly the plain fused dot
+        return fused_dot_layer(x, w, data_bits=data_bits,
+                               coeff_bits=coeff_bits)
+
 
 @dataclass(frozen=True)
 class Conv4Block(ConvBlock):
@@ -61,6 +84,11 @@ class Conv4Block(ConvBlock):
     def kernel_body(self, *, tile_h, w, data_bits, coeff_bits):
         return _partial(conv2d.conv4_kernel, tile_h=tile_h, w=w,
                         data_bits=data_bits, coeff_bits=coeff_bits)
+
+    def batched_layer(self, x, w, *, data_bits, coeff_bits, tile_h=16,
+                      interpret=True):
+        return fused_dot_layer(x, w, data_bits=data_bits,
+                               coeff_bits=coeff_bits)
 
 
 CONV1 = register_block(Conv1Block(

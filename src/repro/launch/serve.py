@@ -1,8 +1,17 @@
-"""Serving launcher: batched requests through the continuous-batching
-engine on a reduced (CPU-runnable) config.
+"""Serving launcher: batched requests through the serving engines on
+reduced (CPU-runnable) configs.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
-      --requests 6 --prompt-len 16 --new-tokens 24
+LM workload — continuous-batching decode:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload lm \
+      --arch gemma2-2b --requests 6 --prompt-len 16 --new-tokens 24
+
+CNN workload — plan-driven dynamic batching (the deployment planner
+picks each layer's block/bits for the device, then the engine serves
+image batches through one jitted step per tick):
+
+  PYTHONPATH=src python -m repro.launch.serve --workload cnn \
+      --requests 64 --max-batch 16 [--device v5e] [--shard]
 """
 
 from __future__ import annotations
@@ -13,19 +22,11 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import smoke_config
-from repro.models import build_model
-from repro.serve import Engine, Request, ServeConfig
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=24)
-    ap.add_argument("--max-batch", type=int, default=4)
-    args = ap.parse_args()
+def run_lm(args) -> None:
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.serve import Engine, Request, ServeConfig
 
     cfg = smoke_config(args.arch)
     model = build_model(cfg)
@@ -46,6 +47,66 @@ def main():
           f"({total/dt:.1f} tok/s on {len(jax.devices())} host device(s))")
     for r in reqs[:3]:
         print(f"  req{r.request_id}: {r.out_tokens[:12]}...")
+
+
+def run_cnn(args) -> None:
+    from repro.core import allocate, deploy
+    from repro.core.cnn import fitted_block_models, quickstart_cnn_config
+    from repro.kernels import ops
+    from repro.parallel.sharding import cnn_data_mesh
+    from repro.serve import CNNEngine, CNNServeConfig, ImageRequest
+
+    cfg = quickstart_cnn_config()
+    bm = fitted_block_models()
+    device = allocate.get_device(args.device)
+    plan = deploy.plan_deployment(cfg, bm, device, target=0.8,
+                                  on_infeasible="fallback")
+    print(f"[serve] plan for {device.name}: "
+          + ", ".join(f"L{a.index}={a.block}@d{a.data_bits}/c{a.coeff_bits}"
+                      for a in plan.layers))
+
+    mesh = cnn_data_mesh() if args.shard else None
+    engine = CNNEngine.from_plan(
+        plan, cfg, serve_cfg=CNNServeConfig(max_batch=args.max_batch),
+        mesh=mesh)
+
+    rng = np.random.default_rng(0)
+    d0 = cfg.layers[0].data_bits
+    reqs = [ImageRequest(
+        image=np.asarray(ops.quantize_fixed(
+            rng.integers(0, 1 << (d0 - 1),
+                         engine.in_shape).astype(np.float32), d0)),
+        request_id=i) for i in range(args.requests)]
+    engine.run(reqs[:1])           # warmup compile outside the clock
+    t0 = time.time()
+    engine.run(reqs[1:])
+    dt = time.time() - t0
+    stats = engine.stats()
+    print(f"[serve] {len(reqs) - 1} images in {dt:.2f}s "
+          f"({(len(reqs) - 1)/dt:.1f} images/s, "
+          f"{stats['images_per_step']:.1f} images/step) on "
+          f"{len(jax.devices())} host device(s)"
+          + (f", batch sharded over mesh {dict(mesh.shape)}" if mesh
+             else ""))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "cnn"), default="lm")
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--device", default="v5e",
+                    help="deployment-planner device profile (cnn)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the image batch over host devices (cnn)")
+    args = ap.parse_args()
+    if args.workload == "cnn":
+        run_cnn(args)
+    else:
+        run_lm(args)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import re
 from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -220,3 +221,36 @@ def choose_mode(cfg: ModelConfig, mesh: Mesh) -> str:
     tp_size = mesh.shape["model"]
     bytes_per_chip = cfg.param_count() * 2 / tp_size
     return "fsdp" if bytes_per_chip > 8e9 else "tp"
+
+
+# ---------------------------------------------------------------------------
+# CNN image batches (data-parallel multi-image serving)
+#
+# The CNN hot path has no tensor-parallel dimension worth sharding (whole
+# layers fit one chip by construction — that is the deployment planner's
+# job), so serving parallelism is pure DP: the (N, H, W, C) batch
+# dimension over the data axes.  Used by ``core.cnn.cnn_forward(mesh=)``
+# and the serve engine (``repro.serve.cnn_engine``).
+# ---------------------------------------------------------------------------
+
+def cnn_data_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """1-D all-``data`` mesh over the host's devices for CNN serving."""
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), ("data",))
+
+
+def cnn_batch_sharding(mesh: Mesh, batch: int) -> NamedSharding:
+    """Sharding for an (N, H, W, C) image batch: N over the mesh's data
+    axes when it divides their product, else replicated (the same
+    divisibility rule every other spec here follows)."""
+    if "data" in mesh.axis_names:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    else:                          # bespoke mesh: first axis is the batch axis
+        axes = (mesh.axis_names[0],)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    lead = None
+    if _divides(batch, size):
+        lead = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, P(lead, None, None, None))

@@ -1,3 +1,5 @@
 from repro.serve.engine import ServeConfig, Engine, Request
+from repro.serve.cnn_engine import CNNEngine, CNNServeConfig, ImageRequest
 
-__all__ = ["ServeConfig", "Engine", "Request"]
+__all__ = ["ServeConfig", "Engine", "Request",
+           "CNNEngine", "CNNServeConfig", "ImageRequest"]

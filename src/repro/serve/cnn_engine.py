@@ -1,0 +1,164 @@
+"""Plan-driven CNN inference engine: dynamic batching over fixed slots.
+
+The transformer engine (``repro.serve.engine``) holds a static pool of
+decode slots so every step hits one compiled executable; this is the
+same slot discipline for feed-forward CNN traffic.  A fixed pool of
+``max_batch`` image slots is filled from the request queue, the whole
+pool runs through ONE jitted ``cnn_forward`` step — every layer a
+single batched kernel call on the (max_batch, H, W, C) tensor — and the
+outputs scatter back to their requests.  Empty slots carry zeros; the
+batch shape never changes, so the step never recompiles.
+
+Construction is **plan-driven**: ``CNNEngine.from_plan`` takes a
+``deploy.DeploymentPlan`` and runs each layer with exactly the block and
+(data_bits, coeff_bits) the planner chose for the target device — the
+paper's model-driven deployment loop, serving.
+
+Data parallelism: pass a device mesh (``repro.parallel.sharding.
+cnn_data_mesh``) and the batch dimension is sharded over the data axes —
+inputs are placed with ``cnn_batch_sharding`` and the jitted step keeps
+every layer's activations on that sharding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.blocks import BlockLike, get_block
+from repro.core.cnn import CNNConfig, cnn_forward, init_cnn
+from repro.kernels import conv2d
+
+
+@dataclass
+class CNNServeConfig:
+    max_batch: int = 8             # slot-pool size = compiled batch shape
+
+
+@dataclass
+class ImageRequest:
+    image: np.ndarray              # (H, W, C) quantized container ints
+    request_id: int = 0
+    output: Optional[np.ndarray] = None
+    done: bool = False
+
+
+class CNNEngine:
+    def __init__(self, cfg: CNNConfig, params, blocks: Sequence[BlockLike],
+                 serve_cfg: Optional[CNNServeConfig] = None, mesh=None):
+        if len(tuple(blocks)) != len(cfg.layers):
+            raise ValueError(
+                f"need one block per layer: {len(tuple(blocks))} blocks "
+                f"for {len(cfg.layers)} layers")
+        serve_cfg = serve_cfg if serve_cfg is not None else CNNServeConfig()
+        if serve_cfg.max_batch < 1:
+            raise ValueError(
+                f"max_batch={serve_cfg.max_batch} must be ≥ 1 (a zero-slot "
+                f"pool can never drain its queue)")
+        self.cfg = cfg
+        self.params = params
+        self.blocks = [get_block(b) for b in blocks]
+        self.serve = serve_cfg
+        self.mesh = mesh
+
+        spec0 = cfg.layers[0]
+        self.in_shape = (cfg.img_h, cfg.img_w, spec0.in_channels)
+        self.in_dtype = conv2d.container_dtype(spec0.data_bits)
+        self.active: List[Optional[ImageRequest]] = \
+            [None] * self.serve.max_batch
+        self.steps = 0
+        self.images_served = 0
+
+        self._batch_sharding = None
+        if mesh is not None:
+            from repro.parallel.sharding import cnn_batch_sharding
+            self._batch_sharding = cnn_batch_sharding(
+                mesh, self.serve.max_batch)
+
+        blks = self.blocks
+        self._step = jax.jit(
+            lambda p, batch: cnn_forward(p, batch, cfg, blks, mesh=mesh))
+
+    # -- construction from a deployment plan ----------------------------
+    @classmethod
+    def from_plan(cls, plan, cfg: CNNConfig, *, params=None, key=None,
+                  serve_cfg: Optional[CNNServeConfig] = None, mesh=None
+                  ) -> "CNNEngine":
+        """Engine for a planned deployment: each layer runs the
+        (block, bits) assignment of ``plan`` (``deploy.plan_config``
+        bakes it into the config); ``params`` default to a fresh
+        ``init_cnn`` draw at the planned precisions."""
+        from repro.core import deploy
+        pcfg = deploy.plan_config(plan, cfg)
+        if params is None:
+            key = key if key is not None else jax.random.PRNGKey(0)
+            params = init_cnn(key, pcfg)
+        return cls(pcfg, params, plan.block_names(), serve_cfg, mesh)
+
+    # -- slot management ------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def submit(self, req: ImageRequest) -> bool:
+        """Place a request into a free slot; False when the pool is full
+        (the request waits in the caller's queue for the next step)."""
+        img = np.asarray(req.image)
+        if tuple(img.shape) != self.in_shape:
+            raise ValueError(
+                f"request {req.request_id}: image shape {tuple(img.shape)} "
+                f"!= engine input {self.in_shape}")
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        self.active[slot] = req
+        return True
+
+    # -- one engine tick: run every occupied slot through the CNN --------
+    def step(self) -> int:
+        """One jitted forward over the whole slot pool; returns how many
+        images were served.  Empty slots ride along as zeros — the batch
+        shape is static so every tick reuses the compiled step."""
+        live = [(i, r) for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        batch = np.zeros((self.serve.max_batch,) + self.in_shape,
+                         self.in_dtype)
+        for i, r in live:
+            batch[i] = np.asarray(r.image, self.in_dtype)
+        xb = jnp.asarray(batch)
+        if self._batch_sharding is not None:
+            xb = jax.device_put(xb, self._batch_sharding)
+        out = np.asarray(self._step(self.params, xb))
+        for i, r in live:
+            r.output = out[i]
+            r.done = True
+            self.active[i] = None
+        self.steps += 1
+        self.images_served += len(live)
+        return len(live)
+
+    def run(self, requests: List[ImageRequest]) -> List[ImageRequest]:
+        """Serve a workload to completion: fill slots from the queue,
+        step, repeat — the dynamic-batching loop."""
+        queue = list(requests)
+        while queue or any(r is not None for r in self.active):
+            while queue and self.submit(queue[0]):
+                queue.pop(0)
+            self.step()
+        return requests
+
+    def stats(self) -> dict:
+        """Aggregate serving counters (images/step ≈ realized batch)."""
+        return {
+            "images_served": self.images_served,
+            "steps": self.steps,
+            "images_per_step": self.images_served / max(self.steps, 1),
+            "max_batch": self.serve.max_batch,
+        }

@@ -5,11 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.blocks import (ConvBlock, Conv2Block, get_block, list_blocks,
-                          register_block, unregister_block)
+from hypothesis_compat import given, settings, st
+
+from repro.blocks import (BIT_RANGE, ConvBlock, Conv2Block, get_block,
+                          list_blocks, register_block, unregister_block)
 from repro.core.cnn import (CNNConfig, ConvLayerSpec, choose_blocks,
                             cnn_forward, cnn_forward_ref, init_cnn)
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 DESIGN_POINTS = [(4, 4), (8, 8), (8, 10)]
 
@@ -104,6 +106,47 @@ def test_apply_batched_bit_exact(name, db, cb):
     y = cnn_forward(params, x, cfg, blocks)
     yr = cnn_forward_ref(params, x, cfg)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+# BIT_RANGE edges, the Conv3 packed/unpacked boundary (d+c = 12 is the
+# last packed point, 13 the first unpacked), and the narrow-accumulator
+# guard: (3, 3) runs the int16 _acc_dtype path (d + c + 5 ≤ 16)
+EDGE_POINTS = [
+    (BIT_RANGE[0], BIT_RANGE[0]), (BIT_RANGE[0], BIT_RANGE[1]),
+    (BIT_RANGE[1], BIT_RANGE[0]), (BIT_RANGE[1], BIT_RANGE[1]),
+    (6, 6), (8, 4), (5, 7),        # data + coeff = 12: packed Conv3
+    (7, 6), (8, 5),                # data + coeff = 13: just unpacked
+]
+
+
+@settings(max_examples=10, deadline=None)
+@given(name=st.sampled_from(["conv1", "conv2", "conv3", "conv4"]),
+       point=st.sampled_from(EDGE_POINTS),
+       n=st.integers(min_value=1, max_value=3),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_apply_batched_nhwc_bit_exact_property(name, point, n, seed):
+    """Property: (N, H, W, C) batches through every registry block at the
+    bit-range edges — including the Conv3 packing boundary and the int16
+    accumulator regime — equal the per-image scalar oracle exactly.  Odd
+    out_channels exercise the dual-output pairing tail."""
+    d, c = point
+    blk = get_block(name)
+    rng = np.random.default_rng(seed)
+    ic, oc, h, w = 2, 3, 16, 64
+    x = ops.quantize_fixed(
+        jnp.asarray(rng.integers(-(1 << (d - 1)), 1 << (d - 1),
+                                 (n, h, w, ic)), jnp.float32), d)
+    wts = ops.quantize_fixed(
+        jnp.asarray(rng.integers(-(1 << (c - 1)), 1 << (c - 1),
+                                 (oc, ic, 3, 3)), jnp.float32), c)
+    acc = blk.apply_batched(x, wts, data_bits=d, coeff_bits=c)
+    assert acc.dtype == jnp.int32 and acc.shape == (n, oc, h, w)
+    accr = jnp.stack([jnp.stack([
+        sum(ref.conv2d_3x3_ref(x[i, :, :, j].astype(jnp.int32),
+                               wts[o, j].astype(jnp.int32))
+            for j in range(ic))
+        for o in range(oc)]) for i in range(n)])
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(accr))
 
 
 def test_apply_batched_raw_accumulator():

@@ -1,13 +1,16 @@
-"""CNN-on-conv-blocks: allocator-driven block selection + exact inference."""
+"""CNN-on-conv-blocks: allocator-driven block selection + exact inference,
+batch-first (N, H, W, C) forward, spec validation, model-fit memoization."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.blocks import ConvBlock, get_block
+from repro.blocks import BIT_RANGE, ConvBlock, get_block
+from repro.core import cnn as cnn_mod
 from repro.core.cnn import (CNNConfig, ConvLayerSpec, choose_blocks,
                             cnn_forward, cnn_forward_loop, cnn_forward_ref,
-                            init_cnn)
+                            init_cnn, init_cnn_float)
 from repro.kernels import ops
 
 
@@ -56,3 +59,104 @@ def test_cnn_forward_accepts_names_and_loop_matches():
     yr = cnn_forward_ref(params, x, cfg)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
     np.testing.assert_array_equal(np.asarray(yl), np.asarray(yr))
+
+
+# ---------------------------------------------------------------------------
+# batch-first (N, H, W, C) forward
+# ---------------------------------------------------------------------------
+
+def test_cnn_forward_batched_bit_exact():
+    """(N, H, W, C) batches through the same forward: bit-exact vs the
+    per-image oracle for N ∈ {1, 4, 16}, and every image's result equals
+    its solo single-image forward (no cross-batch leakage)."""
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    blocks = [get_block(n) for n in ("conv4", "conv3", "conv2")]
+    rng = np.random.default_rng(0)
+    xs = ops.quantize_fixed(
+        jnp.asarray(rng.integers(0, 100, (16, 16, 128, 1)), jnp.float32), 8)
+    for n in (1, 4, 16):
+        xb = xs[:n]
+        y = cnn_forward(params, xb, cfg, blocks)
+        yr = cnn_forward_ref(params, xb, cfg)
+        assert y.shape == (n, 16, 128, 2)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    solo = cnn_forward(params, xs[2], cfg, blocks)
+    batched = cnn_forward(params, xs[:4], cfg, blocks)
+    np.testing.assert_array_equal(np.asarray(batched[2]), np.asarray(solo))
+
+
+def test_cnn_forward_batched_rejects_bad_rank():
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="expected"):
+        cnn_forward(params, jnp.zeros((2, 2, 16, 128, 1), jnp.int8), cfg,
+                    ["conv2"] * 3)
+
+
+# ---------------------------------------------------------------------------
+# ConvLayerSpec validation + init_cnn_float across the bit range
+# ---------------------------------------------------------------------------
+
+def test_layer_spec_validates_bit_widths():
+    lo, hi = BIT_RANGE
+    with pytest.raises(ValueError, match="data_bits"):
+        ConvLayerSpec(1, 4, data_bits=lo - 1)
+    with pytest.raises(ValueError, match="coeff_bits"):
+        ConvLayerSpec(1, 4, coeff_bits=1)      # the seed's 1 << -1 crash
+    with pytest.raises(ValueError, match="coeff_bits"):
+        ConvLayerSpec(1, 4, coeff_bits=hi + 1)
+    with pytest.raises(ValueError, match="shift"):
+        ConvLayerSpec(1, 4, shift=-1)
+    with pytest.raises(ValueError, match="channel"):
+        ConvLayerSpec(0, 4)
+
+
+@pytest.mark.parametrize("bits", [BIT_RANGE[0], BIT_RANGE[1]])
+def test_init_and_forward_at_bit_range_edges(bits):
+    """Both edges of the supported range initialize and run bit-exactly
+    (the seed's weight-scale formula raised for narrow coeff widths)."""
+    cfg = CNNConfig(layers=(
+        ConvLayerSpec(1, 3, data_bits=bits, coeff_bits=bits, block="conv2",
+                      shift=max(bits - 2, 0)),
+    ), img_h=16, img_w=64)
+    floats = init_cnn_float(jax.random.PRNGKey(0), cfg)
+    assert np.isfinite(np.asarray(floats[0])).all()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(bits)
+    x = ops.quantize_fixed(
+        jnp.asarray(rng.integers(0, 1 << (bits - 1), (2, 16, 64, 1)),
+                    jnp.float32), bits)
+    y = cnn_forward(params, x, cfg, ["conv2"])
+    yr = cnn_forward_ref(params, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+# ---------------------------------------------------------------------------
+# fitted-model memoization (choose_blocks must not re-sweep per call)
+# ---------------------------------------------------------------------------
+
+def test_choose_blocks_fits_models_once(monkeypatch):
+    """Repeated planning/serving calls share ONE sweep + fit: the seed
+    re-ran the full synthesis sweep and refit BlockModels on every
+    rows=None call."""
+    from repro.core import allocate
+    cnn_mod.clear_fitted_model_cache()
+    calls = {"fit": 0}
+    real_fit = allocate.BlockModels.fit.__func__
+
+    def counting_fit(cls, rows):
+        calls["fit"] += 1
+        return real_fit(cls, rows)
+
+    monkeypatch.setattr(allocate.BlockModels, "fit",
+                        classmethod(counting_fit))
+    cfg = _cfg()
+    first = choose_blocks(cfg)
+    second = choose_blocks(cfg)
+    assert calls["fit"] == 1, "rows=None must memoize the fitted models"
+    assert [b.name for b in first] == [b.name for b in second]
+    # explicit rows still fit fresh (caller owns the sweep)
+    rows = cnn_mod.synth.run_sweep()
+    choose_blocks(cfg, rows=rows)
+    assert calls["fit"] == 2
