@@ -6,8 +6,9 @@ from __future__ import annotations
 
 def main() -> None:
     from benchmarks import (cnn_forward_bench, cnn_serve_bench, deploy_bench,
-                            model_dse_bench, roofline_bench, table2_blocks,
-                            table3_corr, table4_models, table5_alloc)
+                            model_dse_bench, roofline_bench, runtime_bench,
+                            table2_blocks, table3_corr, table4_models,
+                            table5_alloc)
     print("name,us_per_call,derived")
     table2_blocks.run()
     table3_corr.run()
@@ -15,6 +16,7 @@ def main() -> None:
     table5_alloc.run()
     cnn_forward_bench.run()
     cnn_serve_bench.run()      # also writes BENCH_cnn_serve.json
+    runtime_bench.run()        # also writes BENCH_runtime.json
     deploy_bench.run()
     roofline_bench.run()
     model_dse_bench.run()

@@ -1,6 +1,7 @@
 """CNN deployment on the paper's convolution-block library: the fitted
-resource models pick a block per layer under the platform budget, then the
-quantized network runs bit-exactly through the Pallas blocks.
+resource models pick a block per layer under the platform budget, then
+the quantized network runs bit-exactly through AOT-compiled executables
+(``repro.runtime.CompiledCNN`` — the plan→compile→serve facade).
 
     PYTHONPATH=src python examples/cnn_blocks.py
 """
@@ -13,9 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cnn import (choose_blocks, cnn_forward, cnn_forward_ref,
-                            init_cnn, quickstart_cnn_config)
+from repro.core.cnn import (choose_blocks, cnn_forward_ref, init_cnn,
+                            quickstart_cnn_config)
 from repro.kernels import ops
+from repro.runtime import CompiledCNN
 
 
 def main():
@@ -29,15 +31,29 @@ def main():
               f"({blk.convs_per_step} convs/step)")
 
     params = init_cnn(jax.random.PRNGKey(0), cfg)
+    cnn = CompiledCNN(cfg, params, blocks, max_batch=4)   # AOT buckets
+    print(f"compiled buckets {cnn.buckets}: "
+          f"{cnn.stats()['executables']} executables, zero compiles left "
+          "on the call path")
+
     rng = np.random.default_rng(0)
     x = ops.quantize_fixed(
         jnp.asarray(rng.integers(0, 100, (cfg.img_h, cfg.img_w, 1)),
                     jnp.float32), 8)
-    y = cnn_forward(params, x, cfg, blocks)
+    y = cnn(x)                           # single image → size-1 bucket
     yr = cnn_forward_ref(params, x, cfg)
     exact = bool(jnp.all(y == yr))
     print(f"output {y.shape}, bit-exact vs oracle: {exact}")
     assert exact
+
+    xb = ops.quantize_fixed(
+        jnp.asarray(rng.integers(0, 100, (3, cfg.img_h, cfg.img_w, 1)),
+                    jnp.float32), 8)
+    yb = cnn(xb)                         # 3 images → size-4 bucket
+    exact_b = bool(jnp.all(yb == cnn_forward_ref(params, xb, cfg)))
+    print(f"batch {xb.shape[0]} via bucket {cnn.bucket_for(xb.shape[0])}, "
+          f"bit-exact: {exact_b}")
+    assert exact_b
 
 
 if __name__ == "__main__":

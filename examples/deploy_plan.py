@@ -1,16 +1,20 @@
 """Deployment planning end-to-end (the paper's "FPGA selection and
 optimized CNN deployment" tool, §4.1-4.2): plan the quickstart CNN over
 the device catalog, print the Pareto frontier, pick the cheapest part
-that fits, execute the plan bit-exactly, and validate the fitted
+that fits, persist the plan as a versioned JSON artifact
+(``repro.runtime``), execute it bit-exactly, and validate the fitted
 resource models against a fresh trace of the deployed kernels.
 
     PYTHONPATH=src python examples/deploy_plan.py
 """
 
 import sys
+import tempfile
+from pathlib import Path
 
 sys.path.insert(0, "src")
 
+from repro import runtime
 from repro.core import allocate, deploy, synth
 from repro.core.allocate import BUDGET_RESOURCES, DEVICE_CATALOG
 from repro.core.cnn import quickstart_cnn_config
@@ -54,6 +58,16 @@ def main():
     for a in plan.layers:
         print(f"  layer {a.index}: {a.block} d={a.data_bits} "
               f"c={a.coeff_bits} calls/fwd={a.calls}")
+
+    # the plan is a durable artifact: serialize it, reload it, and the
+    # copy is exactly the plan (the ``repro.runtime`` serving contract)
+    path = Path(tempfile.mkdtemp()) / "plan.json"
+    runtime.save_plan(plan, path)
+    assert runtime.load_plan(path) == plan
+    print(f"\nplan serialized to {path} "
+          f"(schema v{runtime.PLAN_SCHEMA_VERSION}; reload == original) — "
+          "serve it with repro.runtime.CompiledCNN.from_plan or "
+          "`python -m repro.launch.serve --workload cnn --plan plan.json`")
 
     print("\nexecuting the plan (cnn_forward vs the integer oracle) and "
           "re-tracing the deployed kernels:")

@@ -7,6 +7,10 @@ swap ``smoke_config`` for ``get_config`` and launch via
 ``repro.launch.train`` / ``repro.launch.dryrun``.
 
     PYTHONPATH=src python examples/quickstart.py [--steps 200]
+
+For the paper's CNN deployment quickstart (plan → JSON artifact → AOT
+compile → serve via ``repro.runtime``), see ``examples/cnn_blocks.py``
+and ``examples/serve_cnn.py``.
 """
 
 import argparse

@@ -159,7 +159,14 @@ def _requantize(acc, spec: ConvLayerSpec):
 
 def cnn_forward(params, x, cfg: CNNConfig, blocks: Sequence[BlockLike],
                 *, mesh=None):
-    """x: (H, W, C_in) quantized ints, or an (N, H, W, C_in) image batch.
+    """.. deprecated:: as a serving entry point — prefer
+    ``repro.runtime.CompiledCNN`` (AOT batch-bucketed executables, plan
+    construction, no per-call re-threading of cfg/params/blocks/mesh).
+    The signature is kept verbatim: this remains the jit-traceable
+    functional core that ``CompiledCNN`` compiles per layer, and the
+    oracle-adjacent path ``deploy.validate_plan`` executes.
+
+    x: (H, W, C_in) quantized ints, or an (N, H, W, C_in) image batch.
     Returns the last layer's (H, W, C_out) — or (N, H, W, C_out).  Each
     layer is ONE ``apply_batched`` call — all (out_ch, in_ch) planes (and
     all batch images) through the assigned block in a single jitted

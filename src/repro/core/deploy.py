@@ -36,9 +36,11 @@ ratio at the design point, and a plan takes the max over its layers
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +70,12 @@ class DeploymentError(RuntimeError):
     """A CNN (or one of its layers) does not fit a device's budgets."""
 
 
+# Version of the serialized DeploymentPlan payload.  Bump whenever the
+# JSON field semantics change and regenerate tests/golden/plan_golden.json
+# (mirrors synth.SWEEP_SCHEMA_VERSION for the sweep cache).
+PLAN_SCHEMA_VERSION = 1
+
+
 @dataclass(frozen=True)
 class LayerAssignment:
     """One layer's planned execution: block + precision + its predicted
@@ -90,6 +98,7 @@ class DeploymentPlan:
     convs_per_step: float          # plane convolutions per kernel call
     feasible: bool = True
     quant_error: Optional[float] = None   # filled by quantization_error
+    cnn: Optional[CNNConfig] = None       # the planned network itself
 
     @property
     def max_usage_pct(self) -> float:
@@ -100,6 +109,105 @@ class DeploymentPlan:
 
     def bits(self) -> List[Tuple[int, int]]:
         return [(a.data_bits, a.coeff_bits) for a in self.layers]
+
+    # -- serialization (the durable deployment artifact) -----------------
+    #
+    # A plan embeds everything a runtime needs: the device it was planned
+    # for, the per-layer (block, bits) assignment with predicted demand,
+    # AND the network geometry (``cnn``) — so ``to_json`` on one machine
+    # and ``repro.runtime`` on another reproduces the exact deployment.
+
+    def to_json(self, *, indent: Optional[int] = 2) -> str:
+        """Versioned JSON payload; ``from_json`` round-trips it exactly
+        (schema pinned by tests/golden/plan_golden.json)."""
+        cnn = None
+        if self.cnn is not None:
+            cnn = {
+                "img_h": int(self.cnn.img_h),
+                "img_w": int(self.cnn.img_w),
+                "layers": [{
+                    "in_channels": int(s.in_channels),
+                    "out_channels": int(s.out_channels),
+                    "data_bits": int(s.data_bits),
+                    "coeff_bits": int(s.coeff_bits),
+                    "shift": int(s.shift),
+                    "block": s.block,
+                } for s in self.cnn.layers],
+            }
+        payload = {
+            "version": PLAN_SCHEMA_VERSION,
+            "device": {
+                "name": self.device.name,
+                "budgets": {r: float(v)
+                            for r, v in sorted(self.device.budgets.items())},
+                "cost": float(self.device.cost),
+                "description": self.device.description,
+            },
+            "target": float(self.target),
+            "layers": [{
+                "index": int(a.index),
+                "block": a.block,
+                "data_bits": int(a.data_bits),
+                "coeff_bits": int(a.coeff_bits),
+                "calls": int(a.calls),
+                "demand": {r: float(v) for r, v in sorted(a.demand.items())},
+            } for a in self.layers],
+            "demand": {r: float(v) for r, v in sorted(self.demand.items())},
+            "usage_pct": {r: float(v)
+                          for r, v in sorted(self.usage_pct.items())},
+            "convs_per_step": float(self.convs_per_step),
+            "feasible": bool(self.feasible),
+            "quant_error": (None if self.quant_error is None
+                            else float(self.quant_error)),
+            "cnn": cnn,
+        }
+        return json.dumps(payload, indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "DeploymentPlan":
+        payload = json.loads(text)
+        version = payload.get("version")
+        if version != PLAN_SCHEMA_VERSION:
+            raise ValueError(
+                f"deployment plan schema version {version!r} != supported "
+                f"{PLAN_SCHEMA_VERSION} — re-plan with this repro version "
+                f"(plans are not migrated across schema bumps)")
+        dev = payload["device"]
+        device = DeviceProfile(
+            name=dev["name"], budgets=dict(dev["budgets"]),
+            cost=dev["cost"], description=dev.get("description", ""))
+        layers = tuple(LayerAssignment(
+            index=int(a["index"]), block=a["block"],
+            data_bits=int(a["data_bits"]), coeff_bits=int(a["coeff_bits"]),
+            calls=int(a["calls"]), demand=dict(a["demand"]))
+            for a in payload["layers"])
+        cnn = None
+        if payload.get("cnn") is not None:
+            c = payload["cnn"]
+            cnn = CNNConfig(
+                layers=tuple(ConvLayerSpec(
+                    in_channels=int(s["in_channels"]),
+                    out_channels=int(s["out_channels"]),
+                    data_bits=int(s["data_bits"]),
+                    coeff_bits=int(s["coeff_bits"]),
+                    shift=int(s["shift"]), block=s["block"])
+                    for s in c["layers"]),
+                img_h=int(c["img_h"]), img_w=int(c["img_w"]))
+        return cls(device=device, target=payload["target"], layers=layers,
+                   demand=dict(payload["demand"]),
+                   usage_pct=dict(payload["usage_pct"]),
+                   convs_per_step=payload["convs_per_step"],
+                   feasible=payload["feasible"],
+                   quant_error=payload["quant_error"], cnn=cnn)
+
+    def save(self, path: Union[str, Path]) -> Path:
+        path = Path(path)
+        path.write_text(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: Union[str, Path]) -> "DeploymentPlan":
+        return cls.from_json(Path(path).read_text())
 
 
 def _as_device(device: Optional[BudgetLike]) -> DeviceProfile:
@@ -263,12 +371,19 @@ def plan_deployment(cfg: CNNConfig, bm: allocate.BlockModels,
         device=dev, target=target, layers=tuple(assignments),
         demand=totals, usage_pct=usage,
         convs_per_step=plane_convs / max(total_calls, 1),
-        feasible=feasible)
+        feasible=feasible, cnn=cfg)
 
 
-def plan_config(plan: DeploymentPlan, cfg: CNNConfig) -> CNNConfig:
+def plan_config(plan: DeploymentPlan,
+                cfg: Optional[CNNConfig] = None) -> CNNConfig:
     """The plan baked back into a runnable config: each layer spec gets
-    the planned block and bits (shift and channels are unchanged)."""
+    the planned block and bits (shift and channels are unchanged).
+    ``cfg`` defaults to the network the plan was made for (``plan.cnn``
+    — always present on planner output and serialized plans)."""
+    if cfg is None:
+        cfg = plan.cnn
+    if cfg is None:
+        raise ValueError("plan carries no CNNConfig; pass cfg explicitly")
     specs = tuple(dataclasses.replace(spec, block=a.block,
                                       data_bits=a.data_bits,
                                       coeff_bits=a.coeff_bits)

@@ -230,7 +230,9 @@ def choose_mode(cfg: ModelConfig, mesh: Mesh) -> str:
 # layers fit one chip by construction — that is the deployment planner's
 # job), so serving parallelism is pure DP: the (N, H, W, C) batch
 # dimension over the data axes.  Used by ``core.cnn.cnn_forward(mesh=)``
-# and the serve engine (``repro.serve.cnn_engine``).
+# and the AOT bucketed runtime (``repro.runtime.CompiledCNN``, which the
+# serve engine executes through): each batch-bucket executable places
+# and constrains its bucket-sized batch with ``cnn_batch_sharding``.
 # ---------------------------------------------------------------------------
 
 def cnn_data_mesh(devices: Optional[Sequence] = None) -> Mesh:

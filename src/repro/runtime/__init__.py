@@ -1,0 +1,29 @@
+"""``repro.runtime`` — the single plan→compile→serve execution facade.
+
+The paper's point is that parameterizable blocks plus fitted resource
+models let you *pick a configuration once and deploy it without
+re-running the search*.  This package is that workflow as one API:
+
+  plan     ``deploy.plan_deployment`` → a ``DeploymentPlan`` that is a
+           durable, versioned JSON artifact (``save_plan``/``load_plan``
+           — plan on one machine, serve on another)
+  compile  ``CompiledCNN`` — AOT batch-bucketed executables for the
+           planned network (no first-request compile stall, no
+           fixed-max_batch padding waste)
+  serve    ``repro.serve.CNNEngine`` — the dynamic-batching engine,
+           built on ``CompiledCNN``
+
+Re-exports the plan types so callers need only ``repro.runtime`` and
+``repro.serve``.
+"""
+
+from repro.core.deploy import (DeploymentError, DeploymentPlan,
+                               PLAN_SCHEMA_VERSION, plan_deployment)
+from repro.runtime.compiled import CompiledCNN, bucket_ladder
+from repro.runtime.plan_io import load_plan, save_plan
+
+__all__ = [
+    "CompiledCNN", "DeploymentError", "DeploymentPlan",
+    "PLAN_SCHEMA_VERSION", "bucket_ladder", "load_plan",
+    "plan_deployment", "save_plan",
+]

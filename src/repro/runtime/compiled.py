@@ -1,0 +1,222 @@
+"""``CompiledCNN``: AOT batch-bucketed executables for a planned CNN.
+
+The serving hot path used to pay two avoidable costs:
+
+* **first-request compile stalls** — ``jax.jit`` traces and compiles on
+  the first call, inside the serving critical path;
+* **fixed-batch padding waste** — the engine always ran the full
+  ``(max_batch, H, W, C)`` tensor, so a single live image paid for
+  ``max_batch`` (16× the arithmetic at occupancy 1).
+
+``CompiledCNN`` removes both.  At construction (or an explicit
+``warmup()``) it AOT-compiles each layer via
+``jax.jit(...).lower(...).compile()`` across a **bucket ladder** of
+power-of-two batch sizes (1, 2, 4, …, max_batch), caching executables
+keyed on ``(layer spec, bucket)`` — two layers with identical
+(block, bits, geometry) share one executable per bucket.  A call then
+dispatches to the *smallest bucket ≥ the live batch*: occupancy 1 runs
+the size-1 executable, occupancy 5 pads to 8, and a full pool still
+runs max_batch — every shape pre-compiled, zero traces at serve time.
+
+Construction is plan-first: ``CompiledCNN.from_plan`` consumes a
+``deploy.DeploymentPlan`` (including one loaded from JSON on a machine
+that never ran the planner) and executes exactly the per-layer
+(block, data_bits, coeff_bits) assignment the planner chose.  Outputs
+are bit-exact against ``cnn_forward_ref`` — bucket padding rides along
+as zero images that are sliced off, never summed.
+
+Data parallelism: pass a device mesh and each bucket's executable
+constrains its batch to ``sharding.cnn_batch_sharding`` (batch over the
+data axes when divisible, replicated otherwise).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.blocks import BlockLike, get_block
+from repro.core.cnn import CNNConfig, _requantize, init_cnn
+from repro.kernels import conv2d
+
+
+def bucket_ladder(max_batch: int) -> Tuple[int, ...]:
+    """Power-of-two batch buckets up to ``max_batch`` (which is always
+    the top rung, even when it is not itself a power of two)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch={max_batch} must be ≥ 1")
+    rungs = []
+    b = 1
+    while b < max_batch:
+        rungs.append(b)
+        b <<= 1
+    rungs.append(max_batch)
+    return tuple(rungs)
+
+
+class CompiledCNN:
+    """AOT-compiled, batch-bucketed executor for one CNN deployment."""
+
+    def __init__(self, cfg: CNNConfig, params, blocks: Sequence[BlockLike],
+                 *, max_batch: int = 16, mesh=None, warmup: bool = True):
+        blocks = [get_block(b) for b in blocks]
+        if len(blocks) != len(cfg.layers):
+            raise ValueError(
+                f"need one block per layer: {len(blocks)} blocks "
+                f"for {len(cfg.layers)} layers")
+        self.cfg = cfg
+        self.params = params
+        self.blocks = blocks
+        self.max_batch = max_batch
+        self.buckets = bucket_ladder(max_batch)
+        self.mesh = mesh
+
+        spec0 = cfg.layers[0]
+        self.in_shape = (cfg.img_h, cfg.img_w, spec0.in_channels)
+        self.in_dtype = conv2d.container_dtype(spec0.data_bits)
+
+        # (layer key, bucket) → compiled executable; identical layer
+        # specs share one compile per bucket
+        self._execs: Dict[tuple, object] = {}
+        self.compiles = 0
+        self.bucket_hits: Dict[int, int] = {b: 0 for b in self.buckets}
+        self.calls = 0
+        if warmup:
+            self.warmup()
+
+    # -- construction from a deployment plan -----------------------------
+    @classmethod
+    def from_plan(cls, plan, cfg: Optional[CNNConfig] = None, *,
+                  params=None, key=None, max_batch: int = 16, mesh=None,
+                  warmup: bool = True) -> "CompiledCNN":
+        """Executor for a planned deployment: each layer runs the
+        (block, bits) the planner assigned.  ``cfg`` defaults to the
+        network embedded in the plan (always present on planner output
+        and on plans loaded from JSON); ``params`` default to a fresh
+        ``init_cnn`` draw at the planned precisions."""
+        from repro.core import deploy
+        pcfg = deploy.plan_config(plan, cfg)
+        if params is None:
+            key = key if key is not None else jax.random.PRNGKey(0)
+            params = init_cnn(key, pcfg)
+        return cls(pcfg, params, plan.block_names(), max_batch=max_batch,
+                   mesh=mesh, warmup=warmup)
+
+    @classmethod
+    def from_json(cls, text: str, **kw) -> "CompiledCNN":
+        """Executor straight from a serialized plan artifact."""
+        from repro.core import deploy
+        return cls.from_plan(deploy.DeploymentPlan.from_json(text), **kw)
+
+    # -- AOT compilation --------------------------------------------------
+    def _layer_key(self, i: int, bucket: int) -> tuple:
+        spec = self.cfg.layers[i]
+        return (self.blocks[i].name, spec.data_bits, spec.coeff_bits,
+                spec.shift, spec.in_channels, spec.out_channels,
+                self.cfg.img_h, self.cfg.img_w, bucket)
+
+    def _compile_layer(self, i: int, bucket: int):
+        key = self._layer_key(i, bucket)
+        exe = self._execs.get(key)
+        if exe is not None:
+            return exe
+        spec, blk, mesh = self.cfg.layers[i], self.blocks[i], self.mesh
+
+        def layer(w, x):
+            if mesh is not None:
+                from repro.parallel.sharding import cnn_batch_sharding
+                sh = cnn_batch_sharding(mesh, x.shape[0])
+                x = jax.lax.with_sharding_constraint(x, sh)
+            acc = blk.apply_batched(x, w, data_bits=spec.data_bits,
+                                    coeff_bits=spec.coeff_bits)
+            return _requantize(acc, spec)
+
+        w = self.params[i]
+        x_sds = jax.ShapeDtypeStruct(
+            (bucket, self.cfg.img_h, self.cfg.img_w, spec.in_channels),
+            conv2d.container_dtype(spec.data_bits))
+        w_sds = jax.ShapeDtypeStruct(w.shape, w.dtype)
+        exe = jax.jit(layer).lower(w_sds, x_sds).compile()
+        self._execs[key] = exe
+        self.compiles += 1
+        return exe
+
+    def warmup(self) -> "CompiledCNN":
+        """AOT-compile every (layer, bucket) executable now, so no call
+        ever compiles on the serving critical path."""
+        for b in self.buckets:
+            for i in range(len(self.cfg.layers)):
+                self._compile_layer(i, b)
+        return self
+
+    @property
+    def warmed_up(self) -> bool:
+        return all(self._layer_key(i, b) in self._execs
+                   for b in self.buckets
+                   for i in range(len(self.cfg.layers)))
+
+    # -- dispatch ----------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket ≥ n (n must be ≤ max_batch)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"batch {n} exceeds max_batch={self.max_batch}")
+
+    def _run_bucket(self, xb):
+        """xb: (n, H, W, C) with n ≤ max_batch → (n, H, W, C_out)."""
+        n = xb.shape[0]
+        bucket = self.bucket_for(n)
+        if n < bucket:
+            pad = jnp.zeros((bucket - n,) + xb.shape[1:], xb.dtype)
+            xb = jnp.concatenate([xb, pad])
+        if self.mesh is not None:
+            from repro.parallel.sharding import cnn_batch_sharding
+            xb = jax.device_put(xb, cnn_batch_sharding(self.mesh, bucket))
+        act = xb
+        for i in range(len(self.cfg.layers)):
+            act = self._compile_layer(i, bucket)(self.params[i], act)
+        self.bucket_hits[bucket] += 1
+        return act[:n]
+
+    def __call__(self, x):
+        """x: one (H, W, C) image or an (N, H, W, C) batch of quantized
+        container ints.  Batches larger than ``max_batch`` run in
+        max_batch-sized chunks (the tail dispatching to its own bucket).
+        Bit-exact vs ``cnn_forward_ref`` at every batch size."""
+        x = jnp.asarray(x)
+        single = x.ndim == 3
+        if single:
+            x = x[None]
+        if x.shape[1:] != self.in_shape:
+            raise ValueError(
+                f"image shape {tuple(x.shape[1:])} != compiled input "
+                f"{self.in_shape}")
+        if x.dtype != self.in_dtype:
+            raise ValueError(
+                f"image dtype {x.dtype} != compiled input container "
+                f"{np.dtype(self.in_dtype).name}")
+        self.calls += 1
+        if x.shape[0] == 0:            # empty queue tick: nothing to run
+            last = self.cfg.layers[-1]
+            return jnp.zeros(
+                (0, self.cfg.img_h, self.cfg.img_w, last.out_channels),
+                conv2d.container_dtype(last.data_bits))
+        outs = [self._run_bucket(x[s:s + self.max_batch])
+                for s in range(0, x.shape[0], self.max_batch)]
+        y = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        return y[0] if single else y
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "buckets": list(self.buckets),
+            "bucket_hits": dict(self.bucket_hits),
+            "executables": len(self._execs),
+            "compiles": self.compiles,
+            "calls": self.calls,
+            "warmed_up": self.warmed_up,
+        }

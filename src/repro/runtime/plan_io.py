@@ -1,0 +1,32 @@
+"""Plan artifacts on disk: save/load helpers for ``DeploymentPlan``.
+
+Thin conveniences over ``DeploymentPlan.to_json``/``from_json`` so the
+plan→compile→serve flow reads naturally at call sites:
+
+    plan = deploy.plan_deployment(cfg, bm, device)
+    runtime.save_plan(plan, "plan.json")          # machine A
+    ...
+    plan = runtime.load_plan("plan.json")         # machine B
+    cnn = runtime.CompiledCNN.from_plan(plan, params=params)
+
+The payload is versioned (``deploy.PLAN_SCHEMA_VERSION``) and pinned by
+the golden fixture ``tests/golden/plan_golden.json``; loading a payload
+from a different schema version raises rather than mis-deserializing.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Union
+
+from repro.core.deploy import DeploymentPlan
+
+
+def save_plan(plan: DeploymentPlan, path: Union[str, Path]) -> Path:
+    """Write the versioned JSON artifact; returns the path."""
+    return plan.save(path)
+
+
+def load_plan(path: Union[str, Path]) -> DeploymentPlan:
+    """Load a plan artifact (raises ValueError on schema mismatch)."""
+    return DeploymentPlan.load(path)

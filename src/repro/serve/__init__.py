@@ -1,5 +1,6 @@
+from repro.serve.slots import SlotPool
 from repro.serve.engine import ServeConfig, Engine, Request
 from repro.serve.cnn_engine import CNNEngine, CNNServeConfig, ImageRequest
 
-__all__ = ["ServeConfig", "Engine", "Request",
+__all__ = ["ServeConfig", "Engine", "Request", "SlotPool",
            "CNNEngine", "CNNServeConfig", "ImageRequest"]

@@ -1,42 +1,44 @@
-"""Plan-driven CNN inference engine: dynamic batching over fixed slots.
+"""Plan-driven CNN inference engine: dynamic batching over fixed slots,
+executing through ``repro.runtime.CompiledCNN``.
 
-The transformer engine (``repro.serve.engine``) holds a static pool of
-decode slots so every step hits one compiled executable; this is the
-same slot discipline for feed-forward CNN traffic.  A fixed pool of
-``max_batch`` image slots is filled from the request queue, the whole
-pool runs through ONE jitted ``cnn_forward`` step — every layer a
-single batched kernel call on the (max_batch, H, W, C) tensor — and the
-outputs scatter back to their requests.  Empty slots carry zeros; the
-batch shape never changes, so the step never recompiles.
+The engine keeps the slot discipline it shares with the transformer
+engine (now factored into ``repro.serve.slots.SlotPool``): a fixed pool
+of ``max_batch`` image slots filled from the request queue, one step per
+tick, outputs scattered back.  Execution is the new part — each tick
+gathers only the *live* images and hands them to a ``CompiledCNN``,
+which dispatches to the smallest AOT-compiled batch bucket ≥ the live
+count.  A lone request runs the size-1 executable instead of padding to
+``max_batch`` (the seed behavior: one image paid for 16), and because
+every bucket was compiled at construction, no tick ever hits a compile
+stall.
 
 Construction is **plan-driven**: ``CNNEngine.from_plan`` takes a
-``deploy.DeploymentPlan`` and runs each layer with exactly the block and
-(data_bits, coeff_bits) the planner chose for the target device — the
-paper's model-driven deployment loop, serving.
+``deploy.DeploymentPlan`` — including one loaded from a JSON artifact
+(``repro.runtime.load_plan``) — and serves exactly the per-layer
+(block, data_bits, coeff_bits) assignment the planner chose.
 
 Data parallelism: pass a device mesh (``repro.parallel.sharding.
-cnn_data_mesh``) and the batch dimension is sharded over the data axes —
-inputs are placed with ``cnn_batch_sharding`` and the jitted step keeps
-every layer's activations on that sharding.
+cnn_data_mesh``) and every bucket's executable shards the batch
+dimension over the data axes.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.blocks import BlockLike, get_block
-from repro.core.cnn import CNNConfig, cnn_forward, init_cnn
-from repro.kernels import conv2d
+from repro.blocks import BlockLike
+from repro.core.cnn import CNNConfig
+from repro.runtime.compiled import CompiledCNN
+from repro.serve.slots import SlotPool
 
 
 @dataclass
 class CNNServeConfig:
-    max_batch: int = 8             # slot-pool size = compiled batch shape
+    max_batch: int = 8             # slot-pool size = top batch bucket
+    aot_warmup: bool = True        # pre-compile all buckets at init
 
 
 @dataclass
@@ -47,73 +49,77 @@ class ImageRequest:
     done: bool = False
 
 
-class CNNEngine:
+class CNNEngine(SlotPool):
     def __init__(self, cfg: CNNConfig, params, blocks: Sequence[BlockLike],
-                 serve_cfg: Optional[CNNServeConfig] = None, mesh=None):
-        if len(tuple(blocks)) != len(cfg.layers):
-            raise ValueError(
-                f"need one block per layer: {len(tuple(blocks))} blocks "
-                f"for {len(cfg.layers)} layers")
+                 serve_cfg: Optional[CNNServeConfig] = None, mesh=None, *,
+                 compiled: Optional[CompiledCNN] = None):
         serve_cfg = serve_cfg if serve_cfg is not None else CNNServeConfig()
-        if serve_cfg.max_batch < 1:
+        super().__init__(serve_cfg.max_batch)
+        if compiled is None:
+            compiled = CompiledCNN(cfg, params, blocks,
+                                   max_batch=serve_cfg.max_batch,
+                                   mesh=mesh, warmup=serve_cfg.aot_warmup)
+        elif compiled.max_batch < serve_cfg.max_batch:
             raise ValueError(
-                f"max_batch={serve_cfg.max_batch} must be ≥ 1 (a zero-slot "
-                f"pool can never drain its queue)")
-        self.cfg = cfg
-        self.params = params
-        self.blocks = [get_block(b) for b in blocks]
+                f"compiled max_batch={compiled.max_batch} smaller than the "
+                f"slot pool ({serve_cfg.max_batch}): a full pool could "
+                f"never dispatch")
+        self.compiled = compiled
+        self.cfg = compiled.cfg
+        self.params = compiled.params
+        self.blocks = compiled.blocks
         self.serve = serve_cfg
         self.mesh = mesh
-
-        spec0 = cfg.layers[0]
-        self.in_shape = (cfg.img_h, cfg.img_w, spec0.in_channels)
-        self.in_dtype = conv2d.container_dtype(spec0.data_bits)
-        self.active: List[Optional[ImageRequest]] = \
-            [None] * self.serve.max_batch
-        self.steps = 0
+        self.in_shape = compiled.in_shape
+        self.in_dtype = compiled.in_dtype
         self.images_served = 0
-
-        self._batch_sharding = None
-        if mesh is not None:
-            from repro.parallel.sharding import cnn_batch_sharding
-            self._batch_sharding = cnn_batch_sharding(
-                mesh, self.serve.max_batch)
-
-        blks = self.blocks
-        self._step = jax.jit(
-            lambda p, batch: cnn_forward(p, batch, cfg, blks, mesh=mesh))
 
     # -- construction from a deployment plan ----------------------------
     @classmethod
-    def from_plan(cls, plan, cfg: CNNConfig, *, params=None, key=None,
+    def from_plan(cls, plan, cfg: Optional[CNNConfig] = None, *,
+                  params=None, key=None,
                   serve_cfg: Optional[CNNServeConfig] = None, mesh=None
                   ) -> "CNNEngine":
         """Engine for a planned deployment: each layer runs the
-        (block, bits) assignment of ``plan`` (``deploy.plan_config``
-        bakes it into the config); ``params`` default to a fresh
+        (block, bits) assignment of ``plan`` (``cfg`` defaults to the
+        network embedded in the plan); ``params`` default to a fresh
         ``init_cnn`` draw at the planned precisions."""
-        from repro.core import deploy
-        pcfg = deploy.plan_config(plan, cfg)
-        if params is None:
-            key = key if key is not None else jax.random.PRNGKey(0)
-            params = init_cnn(key, pcfg)
-        return cls(pcfg, params, plan.block_names(), serve_cfg, mesh)
+        serve_cfg = serve_cfg if serve_cfg is not None else CNNServeConfig()
+        if serve_cfg.max_batch < 1:       # fail before compiling anything
+            raise ValueError(f"max_batch={serve_cfg.max_batch} must be ≥ 1")
+        compiled = CompiledCNN.from_plan(
+            plan, cfg, params=params, key=key,
+            max_batch=serve_cfg.max_batch, mesh=mesh,
+            warmup=serve_cfg.aot_warmup)
+        return cls(compiled.cfg, compiled.params, compiled.blocks,
+                   serve_cfg, mesh, compiled=compiled)
 
-    # -- slot management ------------------------------------------------
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.active):
-            if r is None:
-                return i
-        return None
-
+    # -- admission -------------------------------------------------------
     def submit(self, req: ImageRequest) -> bool:
         """Place a request into a free slot; False when the pool is full
-        (the request waits in the caller's queue for the next step)."""
+        (the request waits in the caller's queue for the next step).
+        Shape AND dtype are validated: a float image must carry exact
+        container-representable integers — the seed's silent
+        ``np.asarray(img, in_dtype)`` truncation (0.9 → 0, 200.0 → -56
+        for int8) is now a ``ValueError``."""
         img = np.asarray(req.image)
         if tuple(img.shape) != self.in_shape:
             raise ValueError(
                 f"request {req.request_id}: image shape {tuple(img.shape)} "
                 f"!= engine input {self.in_shape}")
+        if not np.issubdtype(img.dtype, np.integer):
+            if not np.all(np.isfinite(img)) \
+                    or np.any(img != np.round(img)):
+                raise ValueError(
+                    f"request {req.request_id}: image dtype {img.dtype} "
+                    f"carries non-integral values — quantize explicitly "
+                    f"(e.g. ops.quantize_fixed) before submitting")
+        info = np.iinfo(self.in_dtype)
+        if np.any(img < info.min) or np.any(img > info.max):
+            raise ValueError(
+                f"request {req.request_id}: image values outside the "
+                f"{np.dtype(self.in_dtype).name} container range "
+                f"[{info.min}, {info.max}] — would wrap, not clamp")
         slot = self._free_slot()
         if slot is None:
             return False
@@ -122,43 +128,35 @@ class CNNEngine:
 
     # -- one engine tick: run every occupied slot through the CNN --------
     def step(self) -> int:
-        """One jitted forward over the whole slot pool; returns how many
-        images were served.  Empty slots ride along as zeros — the batch
-        shape is static so every tick reuses the compiled step."""
-        live = [(i, r) for i, r in enumerate(self.active) if r is not None]
+        """One bucketed forward over the live slots; returns how many
+        images were served.  Only the occupied slots are gathered — the
+        ``CompiledCNN`` pads to the smallest pre-compiled bucket, so a
+        half-empty pool does a fraction of the full-pool work."""
+        live = self.live()
         if not live:
             return 0
-        batch = np.zeros((self.serve.max_batch,) + self.in_shape,
-                         self.in_dtype)
-        for i, r in live:
-            batch[i] = np.asarray(r.image, self.in_dtype)
-        xb = jnp.asarray(batch)
-        if self._batch_sharding is not None:
-            xb = jax.device_put(xb, self._batch_sharding)
-        out = np.asarray(self._step(self.params, xb))
-        for i, r in live:
-            r.output = out[i]
+        batch = np.stack([np.asarray(r.image, self.in_dtype)
+                          for _, r in live])
+        out = np.asarray(self.compiled(batch))
+        for k, (i, r) in enumerate(live):
+            r.output = out[k]
             r.done = True
             self.active[i] = None
-        self.steps += 1
+        self._note_step(len(live))
         self.images_served += len(live)
         return len(live)
 
-    def run(self, requests: List[ImageRequest]) -> List[ImageRequest]:
-        """Serve a workload to completion: fill slots from the queue,
-        step, repeat — the dynamic-batching loop."""
-        queue = list(requests)
-        while queue or any(r is not None for r in self.active):
-            while queue and self.submit(queue[0]):
-                queue.pop(0)
-            self.step()
-        return requests
-
     def stats(self) -> dict:
-        """Aggregate serving counters (images/step ≈ realized batch)."""
+        """Aggregate serving counters plus occupancy/bucket telemetry:
+        ``occupancy_hist`` is the live-slot histogram per step and
+        ``bucket_hits`` counts dispatches per AOT batch bucket — together
+        they make the bucketed-batching win observable."""
         return {
             "images_served": self.images_served,
             "steps": self.steps,
             "images_per_step": self.images_served / max(self.steps, 1),
-            "max_batch": self.serve.max_batch,
+            "max_batch": self.max_batch,
+            "occupancy_hist": dict(self.occupancy_hist),
+            "bucket_hits": dict(self.compiled.bucket_hits),
+            "aot_warmed_up": self.compiled.warmed_up,
         }

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.slots import SlotPool
+
 
 @dataclass
 class ServeConfig:
@@ -39,15 +41,14 @@ class Request:
     done: bool = False
 
 
-class Engine:
+class Engine(SlotPool):
     def __init__(self, model, params, cfg: ServeConfig):
+        super().__init__(cfg.max_batch)
         self.model = model
         self.params = params
         self.cfg = cfg
-        mc = model.cfg
         self.cache = model.init_cache(cfg.max_batch, cfg.max_len)
         self.pos = np.zeros(cfg.max_batch, np.int32)     # next write slot
-        self.active: List[Optional[Request]] = [None] * cfg.max_batch
 
         self._prefill_one = jax.jit(
             lambda p, b: model.prefill(p, b))
@@ -60,13 +61,7 @@ class Engine:
             return model.decode_step(params, cache, tokens, positions)
         self._decode = jax.jit(decode)
 
-    # -- slot management ------------------------------------------------
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.active):
-            if r is None:
-                return i
-        return None
-
+    # -- slot management (pool bookkeeping lives in SlotPool) ------------
     def _write_slot_cache(self, slot: int, cache_one, plen: int):
         """Copy a single-request prefill cache into the pool cache."""
         def write(pool, one):
@@ -113,22 +108,19 @@ class Engine:
 
     # -- one engine tick: advance every active slot by one token ----------
     def step(self):
-        if not any(r is not None for r in self.active):
+        live = self.live()
+        if not live:
             return
         toks = np.zeros((self.cfg.max_batch, 1), np.int32)
-        for i, r in enumerate(self.active):
-            if r is not None:
-                toks[i, 0] = r.out_tokens[-1]
+        for i, r in live:
+            toks[i, 0] = r.out_tokens[-1]
         # all slots share one executable; pos is per-slot via max (slots
         # write at their own pos through the per-slot mask below)
-        pos = int(max(self.pos[i] for i, r in enumerate(self.active)
-                      if r is not None))
+        pos = int(max(self.pos[i] for i, _ in live))
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks), jnp.int32(pos))
         nxt = self._sample(logits)
-        for i, r in enumerate(self.active):
-            if r is None:
-                continue
+        for i, r in live:
             t = int(nxt[i])
             r.out_tokens.append(t)
             self.pos[i] += 1
@@ -137,14 +129,7 @@ class Engine:
                     or self.pos[i] >= self.cfg.max_len - 1):
                 r.done = True
                 self.active[i] = None
+        self._note_step(len(live))
 
-    def run(self, requests: List[Request]) -> List[Request]:
-        queue = list(requests)
-        done: List[Request] = []
-        while queue or any(r is not None for r in self.active):
-            while queue and self.submit(queue[0]):
-                queue.pop(0)
-            self.step()
-            done.extend(
-                r for r in requests if r.done and r not in done)
-        return requests
+    # run() is inherited from SlotPool: deque-backed queue backfill +
+    # step until both the queue and the slot pool are empty.

@@ -1,0 +1,81 @@
+"""Shared fixed-slot-pool discipline for the serving engines.
+
+Both engines (transformer continuous batching in ``repro.serve.engine``
+and CNN dynamic batching in ``repro.serve.cnn_engine``) run the same
+loop: a fixed pool of ``max_batch`` request slots, a queue that
+backfills free slots between ticks, and one engine ``step`` per tick
+over the occupied slots.  The seed duplicated that bookkeeping in both
+engines — and drained the queue with ``list.pop(0)``, O(n²) over a
+workload.  ``SlotPool`` centralizes it:
+
+  slots       ``active`` (fixed-size list of Optional requests),
+              ``_free_slot``, ``live`` (occupied (slot, request) pairs)
+  drain loop  ``run`` — deque-backed queue backfill + step until both
+              queue and pool are empty (O(n) queue handling)
+  telemetry   ``occupancy_hist`` — live-slot histogram per step, so the
+              realized batch distribution (and thus what bucketed
+              dispatch buys) is observable via ``stats``
+
+Subclasses implement ``submit`` (admission + request validation) and
+``step`` (one tick over the pool), calling ``_note_step(live)`` so the
+occupancy histogram stays current.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+
+class SlotPool:
+    def __init__(self, max_batch: int):
+        if max_batch < 1:
+            raise ValueError(
+                f"max_batch={max_batch} must be ≥ 1 (a zero-slot "
+                f"pool can never drain its queue)")
+        self.max_batch = max_batch
+        self.active: List[Optional[object]] = [None] * max_batch
+        # realized live-slot counts: occupancy_hist[k] = steps that ran
+        # with exactly k occupied slots (k ≥ 1; empty ticks don't step)
+        self.occupancy_hist: Dict[int, int] = {}
+        self.steps = 0
+
+    # -- slot bookkeeping ------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def live(self):
+        """Occupied (slot, request) pairs, in slot order."""
+        return [(i, r) for i, r in enumerate(self.active) if r is not None]
+
+    def _note_step(self, live: int) -> None:
+        """Record one executed tick over ``live`` occupied slots."""
+        self.steps += 1
+        self.occupancy_hist[live] = self.occupancy_hist.get(live, 0) + 1
+
+    # -- engine interface ------------------------------------------------
+    def submit(self, req) -> bool:
+        """Admit one request into a free slot; False when it must wait
+        (pool full, or the engine's admission rule defers it)."""
+        raise NotImplementedError
+
+    def step(self):
+        """One tick over the occupied slots (subclasses)."""
+        raise NotImplementedError
+
+    # -- the drain loop ---------------------------------------------------
+    def run(self, requests: Sequence) -> List:
+        """Serve a workload to completion: backfill free slots from the
+        queue, step, repeat.  The queue is a ``collections.deque`` —
+        popping the head is O(1), so a large workload costs O(n), not
+        the seed's O(n²) ``list.pop(0)``."""
+        requests = list(requests)
+        queue = deque(requests)
+        while queue or any(r is not None for r in self.active):
+            while queue and self.submit(queue[0]):
+                queue.popleft()
+            self.step()
+        return requests

@@ -109,6 +109,83 @@ def test_engine_block_count_mismatch():
         CNNEngine(cfg, params, ["conv2"])
 
 
+def test_engine_rejects_non_integral_float_images():
+    """A float image with fractional values used to be silently truncated
+    by the int cast in step(); submit now rejects it."""
+    eng = _engine(max_batch=2)
+    good = _requests(eng, 1)[0]
+    # float dtype but exactly integral values: accepted (cast is exact)
+    float_img = np.asarray(good.image, np.float32)
+    assert eng.submit(ImageRequest(image=float_img, request_id=1))
+    with pytest.raises(ValueError, match="non-integral"):
+        eng.submit(ImageRequest(image=float_img + 0.5, request_id=2))
+    with pytest.raises(ValueError, match="non-integral"):
+        eng.submit(ImageRequest(
+            image=np.full(eng.in_shape, np.nan, np.float32), request_id=3))
+    # values outside the container range would wrap, not clamp: rejected
+    hi = np.iinfo(eng.in_dtype).max
+    with pytest.raises(ValueError, match="container range"):
+        eng.submit(ImageRequest(
+            image=np.full(eng.in_shape, hi + 1, np.int32), request_id=4))
+    # the accepted float image still serves bit-exactly
+    eng.step()
+    yr = cnn_forward_ref(eng.params, jnp.asarray(good.image), eng.cfg)
+    req = ImageRequest(image=float_img, request_id=5)
+    eng.submit(req)
+    eng.step()
+    np.testing.assert_array_equal(req.output, np.asarray(yr))
+
+
+def test_engine_large_queue_drains_in_order():
+    """Deque regression (the run loop used list.pop(0), O(n²) over a
+    workload): a queue much larger than the pool drains completely, in
+    FIFO waves, every output bit-exact."""
+    eng = _engine(max_batch=4)
+    reqs = _requests(eng, 257, seed=7)
+    out = eng.run(reqs)
+    assert out is not None and len(out) == 257
+    assert all(r.done for r in reqs)
+    stats = eng.stats()
+    assert stats["images_served"] == 257
+    assert stats["steps"] == 65            # 64 full waves + the tail of 1
+    # FIFO: the first pool-load is exactly the first 4 requests, etc.
+    ref = cnn_forward_ref(eng.params, jnp.asarray(reqs[-1].image), eng.cfg)
+    np.testing.assert_array_equal(reqs[-1].output, np.asarray(ref))
+
+
+def test_engine_occupancy_and_bucket_telemetry():
+    """stats() exposes the live-slot histogram and the CompiledCNN
+    bucket-hit counts — the observable face of bucketed batching."""
+    eng = _engine(max_batch=4)
+    reqs = _requests(eng, 7)
+    eng.run(reqs)                          # waves of 4 then 3
+    stats = eng.stats()
+    assert stats["occupancy_hist"] == {4: 1, 3: 1}
+    # occupancy 4 → bucket 4; occupancy 3 → smallest bucket ≥ 3 is 4
+    assert stats["bucket_hits"] == {1: 0, 2: 0, 4: 2}
+    assert stats["aot_warmed_up"]
+    solo = _requests(eng, 1, seed=9)[0]
+    eng.submit(solo)
+    eng.step()
+    stats = eng.stats()
+    assert stats["occupancy_hist"][1] == 1
+    assert stats["bucket_hits"][1] == 1    # a lone image no longer pays
+    assert stats["images_per_step"] == 8 / 3
+
+
+def test_engine_no_warmup_still_serves():
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    eng = CNNEngine(cfg, params, [s.block for s in cfg.layers],
+                    CNNServeConfig(max_batch=2, aot_warmup=False))
+    assert not eng.stats()["aot_warmed_up"]
+    reqs = _requests(eng, 3, seed=4)
+    eng.run(reqs)
+    for r in reqs:
+        yr = cnn_forward_ref(eng.params, jnp.asarray(r.image), eng.cfg)
+        np.testing.assert_array_equal(r.output, np.asarray(yr))
+
+
 def test_engine_rejects_empty_slot_pool():
     """max_batch < 1 would make run() spin forever (submit always False,
     step always 0) — must be rejected at construction."""

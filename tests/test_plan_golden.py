@@ -1,0 +1,92 @@
+"""Golden regression for the serialized DeploymentPlan: the JSON plan
+artifact is a cross-machine deployment contract, so its schema must not
+drift silently.  If a change is *intentional*, bump
+``deploy.PLAN_SCHEMA_VERSION`` and regenerate the fixture:
+
+    PYTHONPATH=src python tests/test_plan_golden.py
+
+(mirrors the ``SWEEP_SCHEMA_VERSION`` / synth_golden.json pattern).
+The golden plan is hand-constructed with pinned demand numbers — it
+does not depend on the sweep or the fitted models, so it only moves
+when the schema itself does."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core import deploy
+from repro.core.allocate import DeviceProfile
+from repro.core.cnn import CNNConfig, ConvLayerSpec
+from repro.core.deploy import DeploymentPlan, LayerAssignment
+
+GOLDEN = Path(__file__).parent / "golden" / "plan_golden.json"
+
+
+def _golden_plan() -> DeploymentPlan:
+    """A fully-populated plan with pinned values covering every schema
+    field: custom device, two layers (one block-pinned), fractional
+    demand, quant_error set, embedded network config."""
+    device = DeviceProfile(
+        name="golden-dev", cost=0.75,
+        budgets={"hbm_bytes": 1000.0, "mxu_cost": 2000.0,
+                 "vmem_bytes": 4096.0, "vpu_ops": 500.0},
+        description="pinned fixture device")
+    layers = (
+        LayerAssignment(index=0, block="conv4", data_bits=8, coeff_bits=6,
+                        calls=2,
+                        demand={"hbm_bytes": 12.5, "mxu_cost": 100.25,
+                                "vmem_bytes": 2048.0, "vpu_ops": 3.0}),
+        LayerAssignment(index=1, block="conv1", data_bits=6, coeff_bits=4,
+                        calls=8,
+                        demand={"hbm_bytes": 40.0, "mxu_cost": 0.0,
+                                "vmem_bytes": 1024.0, "vpu_ops": 44.75}),
+    )
+    cnn = CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, shift=7),
+        ConvLayerSpec(4, 2, data_bits=6, coeff_bits=4, shift=5,
+                      block="conv1"),
+    ), img_h=16, img_w=64)
+    return DeploymentPlan(
+        device=device, target=0.8, layers=layers,
+        demand={"hbm_bytes": 52.5, "mxu_cost": 100.25,
+                "vmem_bytes": 2048.0, "vpu_ops": 47.75},
+        usage_pct={"hbm_bytes": 5.25, "mxu_cost": 5.0125,
+                   "vmem_bytes": 50.0, "vpu_ops": 9.55},
+        convs_per_step=1.6, feasible=True, quant_error=0.0421, cnn=cnn)
+
+
+def test_golden_fixture_matches_schema_version():
+    assert json.loads(GOLDEN.read_text())["version"] \
+        == deploy.PLAN_SCHEMA_VERSION, (
+        "PLAN_SCHEMA_VERSION changed — regenerate the golden fixture "
+        "(PYTHONPATH=src python tests/test_plan_golden.py)")
+
+
+def test_plan_serialization_matches_golden():
+    """to_json of the pinned plan must byte-match the fixture: any field
+    added, renamed, or re-typed is a schema change and needs a
+    PLAN_SCHEMA_VERSION bump + fixture regeneration."""
+    assert _golden_plan().to_json() + "\n" == GOLDEN.read_text(), (
+        "serialized plan drifted from tests/golden/plan_golden.json — "
+        "if intentional, bump PLAN_SCHEMA_VERSION and regenerate")
+
+
+def test_golden_fixture_round_trips():
+    plan = DeploymentPlan.from_json(GOLDEN.read_text())
+    assert plan == _golden_plan()
+    assert DeploymentPlan.from_json(plan.to_json()) == plan
+
+
+def test_wrong_schema_version_rejected():
+    payload = json.loads(GOLDEN.read_text())
+    payload["version"] = deploy.PLAN_SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema version"):
+        DeploymentPlan.from_json(json.dumps(payload))
+    with pytest.raises(ValueError, match="schema version"):
+        DeploymentPlan.from_json("{}")      # pre-versioning payload
+
+
+if __name__ == "__main__":                  # regenerate the fixture
+    GOLDEN.write_text(_golden_plan().to_json() + "\n")
+    print(f"wrote {GOLDEN} at schema v{deploy.PLAN_SCHEMA_VERSION}")

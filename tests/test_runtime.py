@@ -1,0 +1,215 @@
+"""repro.runtime: serializable DeploymentPlans and the AOT
+batch-bucketed CompiledCNN (plan→compile→serve, bit-exact)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime
+from repro.core import deploy
+from repro.core.cnn import (CNNConfig, ConvLayerSpec, cnn_forward_ref,
+                            fitted_block_models, init_cnn,
+                            quickstart_cnn_config)
+from repro.kernels import ops
+from repro.runtime import CompiledCNN, bucket_ladder
+
+
+def _cfg():
+    return CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
+        ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
+    ), img_h=16, img_w=64)
+
+
+def _images(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    d0 = cfg.layers[0].data_bits
+    return np.asarray(ops.quantize_fixed(jnp.asarray(
+        rng.integers(0, 1 << (d0 - 1),
+                     (n, cfg.img_h, cfg.img_w, cfg.layers[0].in_channels)),
+        jnp.float32), d0))
+
+
+@pytest.fixture(scope="module")
+def bm():
+    return fitted_block_models()
+
+
+@pytest.fixture(scope="module")
+def plan(bm):
+    return deploy.plan_deployment(_cfg(), bm, target=0.8,
+                                  on_infeasible="fallback")
+
+
+# ---------------------------------------------------------------------------
+# serializable plans
+# ---------------------------------------------------------------------------
+
+def test_plan_json_round_trip_exact(plan):
+    """The acceptance contract: from_json(to_json()) == the plan, and a
+    second serialization is byte-identical."""
+    text = plan.to_json()
+    loaded = deploy.DeploymentPlan.from_json(text)
+    assert loaded == plan
+    assert loaded.to_json() == text
+    # the network config travels inside the artifact
+    assert loaded.cnn == _cfg()
+    assert deploy.plan_config(loaded) == deploy.plan_config(plan, _cfg())
+
+
+def test_plan_save_load_file(plan, tmp_path):
+    path = runtime.save_plan(plan, tmp_path / "plan.json")
+    assert runtime.load_plan(path) == plan
+
+
+def test_plan_round_trip_preserves_quant_error(bm):
+    plan = deploy.plan_deployment(_cfg(), bm, target=0.8,
+                                  on_infeasible="fallback")
+    plan.quant_error = 0.125
+    assert deploy.DeploymentPlan.from_json(plan.to_json()) == plan
+
+
+def test_plan_config_needs_some_cfg():
+    plan = deploy.DeploymentPlan(
+        device=deploy._as_device(None), target=0.8, layers=(),
+        demand={}, usage_pct={}, convs_per_step=0.0)
+    with pytest.raises(ValueError, match="no CNNConfig"):
+        deploy.plan_config(plan)
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder + dispatch
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder():
+    assert bucket_ladder(1) == (1,)
+    assert bucket_ladder(8) == (1, 2, 4, 8)
+    assert bucket_ladder(16) == (1, 2, 4, 8, 16)
+    assert bucket_ladder(12) == (1, 2, 4, 8, 12)   # top rung = max_batch
+    with pytest.raises(ValueError, match="max_batch"):
+        bucket_ladder(0)
+
+
+def test_bucket_for():
+    cfg = _cfg()
+    cnn = CompiledCNN(cfg, init_cnn(jax.random.PRNGKey(0), cfg),
+                      [s.block for s in cfg.layers], max_batch=4,
+                      warmup=False)
+    assert [cnn.bucket_for(n) for n in (1, 2, 3, 4)] == [1, 2, 4, 4]
+    with pytest.raises(ValueError, match="exceeds max_batch"):
+        cnn.bucket_for(5)
+
+
+# ---------------------------------------------------------------------------
+# CompiledCNN execution
+# ---------------------------------------------------------------------------
+
+def test_compiled_bit_exact_all_batch_sizes():
+    """Every live batch size — including sizes above max_batch, which
+    chunk — matches the per-image integer oracle exactly."""
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    cnn = CompiledCNN(cfg, params, [s.block for s in cfg.layers],
+                      max_batch=4)
+    assert cnn.warmed_up and cnn.stats()["executables"] == 6  # 2 layers × 3
+    xs = _images(cfg, 9)
+    y_ref = np.asarray(cnn_forward_ref(params, jnp.asarray(xs), cfg))
+    for n in (1, 2, 3, 4, 9):          # 9 > max_batch → 4+4+1 chunks
+        np.testing.assert_array_equal(np.asarray(cnn(xs[:n])), y_ref[:n])
+    # single (H, W, C) image round-trips without the batch axis
+    y1 = np.asarray(cnn(xs[0]))
+    np.testing.assert_array_equal(y1, y_ref[0])
+    hits = cnn.stats()["bucket_hits"]
+    assert hits[1] >= 2 and hits[2] >= 1 and hits[4] >= 3
+
+
+def test_compiled_warmup_precompiles_everything():
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    cnn = CompiledCNN(cfg, params, [s.block for s in cfg.layers],
+                      max_batch=2, warmup=False)
+    assert not cnn.warmed_up and cnn.compiles == 0
+    cnn(_images(cfg, 1))               # lazy compile: only bucket 1
+    assert cnn.compiles == len(cfg.layers) and not cnn.warmed_up
+    cnn.warmup()
+    assert cnn.warmed_up
+    n = cnn.compiles
+    cnn.warmup()                       # idempotent — all cached
+    cnn(_images(cfg, 2))
+    assert cnn.compiles == n
+
+
+def test_compiled_shares_executables_across_identical_layers():
+    """Two layers with the same (block, bits, geometry) share one
+    executable per bucket — the (layer spec, bucket) cache key."""
+    cfg = CNNConfig(layers=(
+        ConvLayerSpec(2, 2, data_bits=8, coeff_bits=6, block="conv2"),
+        ConvLayerSpec(2, 2, data_bits=8, coeff_bits=6, block="conv2"),
+    ), img_h=16, img_w=64)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    cnn = CompiledCNN(cfg, params, [s.block for s in cfg.layers],
+                      max_batch=2)
+    assert cnn.stats()["executables"] == 2     # 1 spec × 2 buckets
+    xs = _images(cfg, 2)
+    np.testing.assert_array_equal(
+        np.asarray(cnn(xs)),
+        np.asarray(cnn_forward_ref(params, jnp.asarray(xs), cfg)))
+
+
+def test_compiled_empty_batch():
+    """An empty (0, H, W, C) batch (e.g. an idle queue tick) returns an
+    empty output of the network's out shape/dtype instead of crashing."""
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    cnn = CompiledCNN(cfg, params, [s.block for s in cfg.layers],
+                      max_batch=2, warmup=False)
+    y = cnn(np.zeros((0,) + cnn.in_shape, cnn.in_dtype))
+    assert y.shape == (0, cfg.img_h, cfg.img_w, cfg.layers[-1].out_channels)
+    assert cnn.compiles == 0           # nothing ran, nothing compiled
+
+
+def test_compiled_validates_inputs():
+    cfg = _cfg()
+    cnn = CompiledCNN(cfg, init_cnn(jax.random.PRNGKey(0), cfg),
+                      [s.block for s in cfg.layers], max_batch=2,
+                      warmup=False)
+    with pytest.raises(ValueError, match="image shape"):
+        cnn(np.zeros((8, 8, 1), np.int8))
+    with pytest.raises(ValueError, match="dtype"):
+        cnn(np.zeros((1,) + cnn.in_shape, np.int32))
+    with pytest.raises(ValueError, match="one block per layer"):
+        CompiledCNN(cfg, init_cnn(jax.random.PRNGKey(0), cfg), ["conv2"])
+
+
+# ---------------------------------------------------------------------------
+# plan → compile → serve (the acceptance loop on the quickstart CNN)
+# ---------------------------------------------------------------------------
+
+def test_from_plan_loaded_json_bit_exact_quickstart(bm, tmp_path):
+    """Acceptance: a plan serialized to disk, reloaded, and compiled via
+    ``CompiledCNN.from_plan`` is bit-exact vs ``cnn_forward_ref`` on the
+    quickstart CNN — plan on one machine, serve on another."""
+    cfg = quickstart_cnn_config()
+    plan = deploy.plan_deployment(cfg, bm, target=0.8,
+                                  on_infeasible="fallback")
+    loaded = runtime.load_plan(runtime.save_plan(plan, tmp_path / "p.json"))
+    assert loaded == plan
+
+    key = jax.random.PRNGKey(7)
+    cnn = CompiledCNN.from_plan(loaded, key=key, max_batch=2)
+    assert cnn.cfg == deploy.plan_config(plan, cfg)
+    pcfg = deploy.plan_config(loaded)
+    params = init_cnn(key, pcfg)       # same draw the runtime made
+    xs = _images(pcfg, 2, seed=3)
+    np.testing.assert_array_equal(
+        np.asarray(cnn(xs)),
+        np.asarray(cnn_forward_ref(params, jnp.asarray(xs), pcfg)))
+
+
+def test_from_json_constructor(plan):
+    cnn = CompiledCNN.from_json(plan.to_json(), max_batch=1)
+    xs = _images(cnn.cfg, 1, seed=5)
+    np.testing.assert_array_equal(
+        np.asarray(cnn(xs)),
+        np.asarray(cnn_forward_ref(cnn.params, jnp.asarray(xs), cnn.cfg)))
