@@ -1,0 +1,223 @@
+"""Continuous-batching gateway vs the tick-loop engine under Poisson
+arrivals.
+
+Both engines serve the same plan, the same ``CompiledCNN`` bucket
+ladder, and the *same arrival sequence*; what differs is the serving
+discipline:
+
+  tick loop   the sync ``CNNEngine`` driven the way a fixed global tick
+      drives it: every ``tick_s`` (the full-batch service time) the
+      queue backfills the slots and one blocking step runs.  Admission
+      is blind — the queue is unbounded, so overload accumulates and
+      every later request pays the backlog.
+  gateway     ``AsyncCNNGateway``: a new bucket dispatch launches the
+      moment slots free (no tick alignment), and admission is bounded —
+      traffic beyond ``max_pending`` is shed at the door, so the tail
+      latency of *admitted* requests stays bounded at any offered load.
+
+Each occupancy k (offered load = k × full-batch service capacity) is
+driven in real time with seeded exponential inter-arrivals; latency is
+measured arrival→completion.  ``run`` records ``BENCH_async_serve.json``
+(uploaded by the CI sweep job); the headline is the gateway at
+occupancy ≥ 2 holding p99 ≤ 0.7× the tick loop's (and winning p50 at
+every load, since nothing waits for a tick edge).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+from collections import deque
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import deploy
+from repro.core.cnn import fitted_block_models, quickstart_cnn_config
+from repro.runtime import CompiledCNN
+from repro.serve import (AsyncCNNGateway, AsyncServeConfig, CNNEngine,
+                         CNNServeConfig, DeadlineExpired, GatewayBacklog,
+                         ImageRequest)
+
+MAX_BATCH = 8
+MAX_PENDING = 2 * MAX_BATCH            # gateway admission bound
+OCCUPANCIES = (0.5, 1.0, 2.0, 4.0)
+REQUESTS = 192                         # per occupancy
+JSON_PATH = "BENCH_async_serve.json"
+
+
+def _percentiles(lat_s):
+    p = np.percentile(np.asarray(lat_s) * 1e3, [50, 95, 99])
+    return {"p50_ms": float(p[0]), "p95_ms": float(p[1]),
+            "p99_ms": float(p[2])}
+
+
+def _measure_step_s(compiled, imgs) -> float:
+    xb = np.stack([np.asarray(i, compiled.in_dtype)
+                   for i in imgs[:MAX_BATCH]])
+    times = []
+    for _ in range(4):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(xb))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _run_tick_loop(engine: CNNEngine, imgs, arrivals, tick_s):
+    """The seed discipline under live traffic: a global tick every
+    ``tick_s``; arrived requests backfill the slots at the tick edge
+    (unbounded queue), then one blocking step.  Latency is
+    arrival→completion per request."""
+    n = len(arrivals)
+    reqs = [ImageRequest(image=imgs[i], request_id=i) for i in range(n)]
+    queue: deque = deque()
+    inflight: list = []
+    lat = [0.0] * n
+    served = 0
+    i = 0
+    t0 = time.monotonic()
+    next_tick = t0
+    while served < n:
+        now = time.monotonic()
+        if now < next_tick:
+            time.sleep(next_tick - now)
+        next_tick += tick_s
+        now = time.monotonic()
+        while i < n and t0 + arrivals[i] <= now:
+            queue.append(i)
+            i += 1
+        while queue and engine.submit(reqs[queue[0]]):
+            inflight.append(queue.popleft())
+        engine.step()
+        done_at = time.monotonic()
+        still = []
+        for k in inflight:
+            if reqs[k].done:
+                lat[k] = done_at - (t0 + arrivals[k])
+                served += 1
+            else:
+                still.append(k)
+        inflight = still
+        # a drained pool with no arrivals yet: skip ahead to the next
+        # arrival's tick edge instead of spinning empty ticks
+        if not queue and not inflight and i < n:
+            while next_tick < t0 + arrivals[i]:
+                next_tick += tick_s
+    makespan = time.monotonic() - t0
+    return lat, makespan
+
+
+def _run_gateway(gw: AsyncCNNGateway, imgs, arrivals):
+    """Same arrival sequence through the async front door; overload is
+    shed at the admission bound (latency is over served requests)."""
+    n = len(arrivals)
+
+    async def drive():
+        latencies, shed = [], 0
+        async with gw:
+            t0 = time.monotonic()
+
+            async def one(i):
+                nonlocal shed
+                await asyncio.sleep(
+                    max(0.0, arrivals[i] - (time.monotonic() - t0)))
+                try:
+                    fut = gw.submit_nowait(imgs[i])
+                    await fut
+                    latencies.append(
+                        time.monotonic() - (t0 + arrivals[i]))
+                except GatewayBacklog:
+                    shed += 1
+                except DeadlineExpired:
+                    pass
+
+            await asyncio.gather(*(one(i) for i in range(n)))
+            return latencies, shed, time.monotonic() - t0
+
+    return asyncio.run(drive())
+
+
+def run(json_path: str | Path = JSON_PATH) -> dict:
+    cfg = quickstart_cnn_config()
+    plan = deploy.plan_deployment(cfg, fitted_block_models(), target=0.8,
+                                  on_infeasible="fallback")
+    compiled = CompiledCNN.from_plan(plan, max_batch=MAX_BATCH)
+    imgs = compiled.sample_images(REQUESTS)
+    step_s = _measure_step_s(compiled, imgs)
+    capacity = MAX_BATCH / step_s
+    emit("async_serve/full_batch_step", step_s * 1e6,
+         f"capacity={capacity:.0f}images_per_s")
+
+    results = []
+    for occ in OCCUPANCIES:
+        rate = occ * capacity
+        rng = np.random.default_rng(42)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, REQUESTS))
+
+        engine = CNNEngine(compiled.cfg, compiled.params,
+                           compiled.blocks,
+                           CNNServeConfig(max_batch=MAX_BATCH),
+                           compiled=compiled)
+        tick_lat, tick_span = _run_tick_loop(engine, imgs, arrivals,
+                                             step_s)
+        tick_pct = _percentiles(tick_lat)
+        tick_ips = REQUESTS / tick_span
+
+        gw = AsyncCNNGateway(AsyncServeConfig(
+            max_batch=MAX_BATCH, max_pending=MAX_PENDING))
+        gw.register_plan(plan, plan_id="bench", compiled=compiled)
+        gw_lat, shed, gw_span = _run_gateway(gw, imgs, arrivals)
+        gw_pct = _percentiles(gw_lat)
+        served = len(gw_lat)
+        gw_ips = served / gw_span
+
+        row = {
+            "occupancy": occ,
+            "offered_images_per_sec": rate,
+            "requests": REQUESTS,
+            "tick": {"images_per_sec": tick_ips, **tick_pct,
+                     "served": REQUESTS},
+            "async": {"images_per_sec": gw_ips, **gw_pct,
+                      "served": served, "shed": shed},
+            "speedup_images_per_sec": gw_ips / tick_ips,
+            "p99_ratio_async_vs_tick": gw_pct["p99_ms"]
+            / tick_pct["p99_ms"],
+            "p50_ratio_async_vs_tick": gw_pct["p50_ms"]
+            / tick_pct["p50_ms"],
+        }
+        results.append(row)
+        emit(f"async_serve/occ{occ:g}_tick_p99", tick_pct["p99_ms"] * 1e3,
+             f"images_per_s={tick_ips:.0f}")
+        emit(f"async_serve/occ{occ:g}_async_p99", gw_pct["p99_ms"] * 1e3,
+             f"images_per_s={gw_ips:.0f};shed={shed}")
+        emit(f"async_serve/occ{occ:g}_ratio", 0.0,
+             f"p99={row['p99_ratio_async_vs_tick']:.2f}x;"
+             f"ips={row['speedup_images_per_sec']:.2f}x")
+
+    overloaded = [r for r in results if r["occupancy"] >= 2.0]
+    headline = min(r["p99_ratio_async_vs_tick"] for r in overloaded)
+    payload = {
+        "bench": "async_serve",
+        "schema": 1,
+        "max_batch": MAX_BATCH,
+        "max_pending": MAX_PENDING,
+        "full_batch_step_ms": step_s * 1e3,
+        "capacity_images_per_sec": capacity,
+        "device_count": len(jax.devices()),
+        "occupancy_results": results,
+        # acceptance: at occupancy ≥ 2, async holds p99 ≤ 0.7× the tick
+        # loop (bounded admission) or serves ≥ 1.5× the images/sec
+        "headline_p99_ratio_at_overload": headline,
+        "headline_speedup_at_overload": max(
+            r["speedup_images_per_sec"] for r in overloaded),
+    }
+    Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

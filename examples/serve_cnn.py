@@ -6,6 +6,9 @@ dynamic-batching engine serves an image workload through AOT-compiled
 batch buckets, bit-exact against the per-image integer oracle.
 
     PYTHONPATH=src python examples/serve_cnn.py
+
+For live traffic (deadlines, backpressure, cancellation, multi-plan
+routing) see the async gateway walkthrough: examples/serve_async.py.
 """
 
 import sys

@@ -1,0 +1,113 @@
+"""Execute every fenced ``python`` snippet in ``docs/*.md`` so the
+documentation can't rot (CI job ``docs``).
+
+    PYTHONPATH=src python scripts/check_docs.py [--only docs/serve.md] [-v]
+
+Rules:
+
+* Fences whose info string is exactly ``python`` are executed, in file
+  order, sharing one namespace per document — a doc reads top-to-bottom
+  as one runnable session (later snippets may use earlier variables).
+* Fences tagged ``python no-check`` are skipped (illustrative
+  fragments; renderers still highlight them — the first word wins).
+* All other fences (``bash``, plain, ...) are ignored.
+* Each document runs with the repo root as cwd and a private temp
+  directory exported as ``DOCS_TMP`` — snippets that write artifacts
+  (plans, sweep caches) must target it rather than polluting the repo.
+
+A snippet failure reports the doc, the snippet's line number, and the
+traceback, and the script exits non-zero.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+import tempfile
+import time
+import traceback
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"^```(.*?)\s*$")
+
+
+def extract_snippets(text: str):
+    """Yield (info_string, start_line, source) per fenced code block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1):
+            info = m.group(1)
+            start = i + 2               # 1-based first source line
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield info, start, "\n".join(body)
+        i += 1
+
+
+def run_doc(path: Path, verbose: bool = False) -> tuple[int, int, int]:
+    """Execute a document's python snippets; returns (ran, skipped,
+    failed)."""
+    ns: dict = {"__name__": f"docs_check_{path.stem}"}
+    ran = skipped = failed = 0
+    raw = path.read_text()
+    for info, line, src in extract_snippets(raw):
+        words = info.split()            # "python", "python no-check", ...
+        if not words or words[0] != "python":
+            continue
+        if "no-check" in words[1:]:
+            skipped += 1
+            continue
+        t0 = time.time()
+        try:
+            code = compile(src, f"{path}:{line}", "exec")
+            exec(code, ns)
+            ran += 1
+            if verbose:
+                print(f"    ok   {path.name}:{line} "
+                      f"({time.time() - t0:.1f}s)")
+        except Exception:
+            failed += 1
+            print(f"FAILED {path}:{line}")
+            traceback.print_exc()
+            break                       # later snippets depend on this one
+    return ran, skipped, failed
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", default=None,
+                    help="check only this doc (repeatable)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args()
+
+    sys.path.insert(0, str(REPO / "src"))
+    os.chdir(REPO)
+    docs = [Path(p).resolve() for p in args.only] if args.only \
+        else sorted((REPO / "docs").glob("*.md"))
+    if not docs:
+        print("no docs found", file=sys.stderr)
+        return 2
+
+    total_failed = 0
+    for doc in docs:
+        with tempfile.TemporaryDirectory(prefix="docs_check_") as tmp:
+            os.environ["DOCS_TMP"] = tmp
+            t0 = time.time()
+            ran, skipped, failed = run_doc(doc, args.verbose)
+            total_failed += failed
+            status = "FAIL" if failed else "ok"
+            print(f"[docs-check] {doc.relative_to(REPO)}: {ran} ran, "
+                  f"{skipped} skipped ({time.time() - t0:.1f}s) {status}")
+    return 1 if total_failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

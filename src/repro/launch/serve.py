@@ -19,15 +19,29 @@ to the smallest bucket that fits:
   # serve a previously planned artifact (possibly from another machine)
   PYTHONPATH=src python -m repro.launch.serve --workload cnn \
       --plan plan.json --requests 64
+
+Async CNN workload — the continuous-batching gateway under Poisson
+arrivals: bounded admission (overload is shed at the door), deadline-
+aware batch formation, a new bucket dispatch the moment slots free:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload cnn --async \
+      --requests 128 --max-batch 8 --occupancy 2.0 \
+      [--deadline-ms 250] [--max-pending 32]
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
 import numpy as np
+
+
+def _percentiles(lat_s):
+    p = np.percentile(np.asarray(lat_s) * 1e3, [50, 95, 99])
+    return {"p50_ms": p[0], "p95_ms": p[1], "p99_ms": p[2]}
 
 
 def run_lm(args) -> None:
@@ -56,13 +70,11 @@ def run_lm(args) -> None:
         print(f"  req{r.request_id}: {r.out_tokens[:12]}...")
 
 
-def run_cnn(args) -> None:
+def _cnn_plan(args):
+    """Load or compute the deployment plan the CNN workloads serve."""
     from repro import runtime
     from repro.core import allocate, deploy
     from repro.core.cnn import fitted_block_models, quickstart_cnn_config
-    from repro.kernels import ops
-    from repro.parallel.sharding import cnn_data_mesh
-    from repro.serve import CNNEngine, CNNServeConfig, ImageRequest
 
     if args.plan:
         plan = runtime.load_plan(args.plan)
@@ -80,7 +92,14 @@ def run_cnn(args) -> None:
     print(f"[serve] plan for {plan.device.name}: "
           + ", ".join(f"L{a.index}={a.block}@d{a.data_bits}/c{a.coeff_bits}"
                       for a in plan.layers))
+    return plan
 
+
+def run_cnn(args) -> None:
+    from repro.parallel.sharding import cnn_data_mesh
+    from repro.serve import CNNEngine, CNNServeConfig, ImageRequest
+
+    plan = _cnn_plan(args)
     mesh = cnn_data_mesh() if args.shard else None
     t0 = time.time()
     engine = CNNEngine.from_plan(           # AOT-compiles every bucket
@@ -90,13 +109,8 @@ def run_cnn(args) -> None:
           f"{len(engine.cfg.layers)} layers compiled in "
           f"{time.time() - t0:.2f}s (off the serving critical path)")
 
-    rng = np.random.default_rng(0)
-    d0 = engine.cfg.layers[0].data_bits
-    reqs = [ImageRequest(
-        image=np.asarray(ops.quantize_fixed(
-            rng.integers(0, 1 << (d0 - 1),
-                         engine.in_shape).astype(np.float32), d0)),
-        request_id=i) for i in range(args.requests)]
+    reqs = [ImageRequest(image=img, request_id=i) for i, img in
+            enumerate(engine.compiled.sample_images(args.requests))]
     t0 = time.time()
     engine.run(reqs)
     dt = time.time() - t0
@@ -109,6 +123,82 @@ def run_cnn(args) -> None:
              else ""))
     print(f"[serve] occupancy histogram: {stats['occupancy_hist']}  "
           f"bucket hits: {stats['bucket_hits']}")
+
+
+def run_cnn_async(args) -> None:
+    """Continuous-batching gateway under Poisson arrivals at an offered
+    load of ``--occupancy`` × the measured full-batch service capacity.
+    Reports tail latency (p50/p95/p99 over *served* requests), shed and
+    expired counts — the front-door view the tick loop cannot give."""
+    from repro.parallel.sharding import cnn_data_mesh
+    from repro.serve import (AsyncCNNGateway, AsyncServeConfig,
+                             DeadlineExpired, GatewayBacklog)
+
+    plan = _cnn_plan(args)
+    mesh = cnn_data_mesh() if args.shard else None
+    t0 = time.time()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=args.max_batch,
+                               max_pending=args.max_pending),
+        mesh=mesh)
+    compiled = gw.plans["plan0"].compiled
+    print(f"[serve] AOT warmup: {len(compiled.buckets)} buckets × "
+          f"{len(compiled.cfg.layers)} layers compiled in "
+          f"{time.time() - t0:.2f}s (shared exec cache: "
+          f"{len(gw.exec_cache)} executables)")
+
+    imgs = compiled.sample_images(args.requests)
+    # service capacity: one timed full-batch dispatch → arrival rate
+    xb = np.stack([np.asarray(i, compiled.in_dtype)
+                   for i in imgs[:args.max_batch]])
+    compiled(xb)                                   # touch
+    t0 = time.perf_counter()
+    jax.block_until_ready(compiled(xb))
+    step_s = time.perf_counter() - t0
+    rate = args.occupancy * args.max_batch / step_s
+    print(f"[serve] full-batch step {step_s * 1e3:.2f}ms → offered load "
+          f"{rate:.0f} images/s (occupancy {args.occupancy:g})")
+
+    deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
+    rng = np.random.default_rng(1)
+    gaps = rng.exponential(1.0 / rate, args.requests)
+
+    async def drive():
+        latencies, shed = [], 0
+        async with gw:
+            t_start = time.monotonic()
+
+            async def one(i, at):
+                nonlocal shed
+                await asyncio.sleep(max(0.0, at - (time.monotonic()
+                                                   - t_start)))
+                t_sub = time.monotonic()
+                try:
+                    fut = gw.submit_nowait(imgs[i], deadline=deadline)
+                    await fut
+                    latencies.append(time.monotonic() - t_sub)
+                except GatewayBacklog:
+                    shed += 1
+                except DeadlineExpired:
+                    pass                           # counted by stats()
+
+            arrivals = np.cumsum(gaps)
+            await asyncio.gather(*(one(i, a)
+                                   for i, a in enumerate(arrivals)))
+            return latencies, shed, time.monotonic() - t_start
+
+    latencies, shed, wall = asyncio.run(drive())
+    stats = gw.stats()
+    pct = _percentiles(latencies) if latencies else {}
+    print(f"[serve] {stats['served']} served / {shed} shed / "
+          f"{stats['expired']} expired of {args.requests} in {wall:.2f}s "
+          f"({stats['served'] / wall:.1f} images/s)")
+    if pct:
+        print(f"[serve] latency p50={pct['p50_ms']:.1f}ms "
+              f"p95={pct['p95_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms")
+    print(f"[serve] occupancy histogram: {stats['occupancy_hist']}  "
+          f"policy: {stats['policy']}  pending bound: "
+          f"{stats['max_pending']}")
 
 
 def main():
@@ -128,9 +218,20 @@ def main():
                     help="write the computed plan to this JSON path (cnn)")
     ap.add_argument("--shard", action="store_true",
                     help="shard the image batch over host devices (cnn)")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="serve through the continuous-batching gateway "
+                         "under Poisson arrivals (cnn)")
+    ap.add_argument("--occupancy", type=float, default=1.0,
+                    help="offered load as a multiple of full-batch "
+                         "service capacity (cnn --async)")
+    ap.add_argument("--max-pending", type=int, default=32,
+                    help="gateway admission bound (cnn --async)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; late requests are "
+                         "expired, never served late (cnn --async)")
     args = ap.parse_args()
     if args.workload == "cnn":
-        run_cnn(args)
+        run_cnn_async(args) if args.async_ else run_cnn(args)
     else:
         run_lm(args)
 

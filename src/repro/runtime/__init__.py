@@ -11,7 +11,11 @@ re-running the search*.  This package is that workflow as one API:
            planned network (no first-request compile stall, no
            fixed-max_batch padding waste)
   serve    ``repro.serve.CNNEngine`` — the dynamic-batching engine,
-           built on ``CompiledCNN``
+           built on ``CompiledCNN`` — and ``repro.serve.
+           AsyncCNNGateway``, the continuous-batching front door that
+           routes *multiple* plans through one shared
+           ``ExecutableCache`` (identical layers compile once across
+           plans)
 
 Re-exports the plan types so callers need only ``repro.runtime`` and
 ``repro.serve``.
@@ -19,11 +23,12 @@ Re-exports the plan types so callers need only ``repro.runtime`` and
 
 from repro.core.deploy import (DeploymentError, DeploymentPlan,
                                PLAN_SCHEMA_VERSION, plan_deployment)
-from repro.runtime.compiled import CompiledCNN, bucket_ladder
+from repro.runtime.compiled import (CompiledCNN, DispatchAborted,
+                                    ExecutableCache, bucket_ladder)
 from repro.runtime.plan_io import load_plan, save_plan
 
 __all__ = [
-    "CompiledCNN", "DeploymentError", "DeploymentPlan",
-    "PLAN_SCHEMA_VERSION", "bucket_ladder", "load_plan",
+    "CompiledCNN", "DeploymentError", "DeploymentPlan", "DispatchAborted",
+    "ExecutableCache", "PLAN_SCHEMA_VERSION", "bucket_ladder", "load_plan",
     "plan_deployment", "save_plan",
 ]

@@ -28,11 +28,21 @@ as zero images that are sliced off, never summed.
 Data parallelism: pass a device mesh and each bucket's executable
 constrains its batch to ``sharding.cnn_batch_sharding`` (batch over the
 data axes when divisible, replicated otherwise).
+
+Multi-plan serving: executables live in an ``ExecutableCache`` — pass
+one cache to several ``CompiledCNN`` instances (the async gateway does)
+and plans whose layer specs coincide share compiles instead of paying
+per plan.  Dispatch is cancellation-safe: ``__call__(x, should_abort=
+...)`` polls the callback between layers and raises ``DispatchAborted``
+instead of finishing work nobody is waiting for, and all telemetry
+counters are lock-protected so ``stats()`` snapshots are consistent
+under the async drain thread.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+import threading
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +51,63 @@ import numpy as np
 from repro.blocks import BlockLike, get_block
 from repro.core.cnn import CNNConfig, _requantize, init_cnn
 from repro.kernels import conv2d
+
+
+class DispatchAborted(RuntimeError):
+    """A bucketed dispatch was abandoned mid-flight: every request it
+    was serving has been cancelled, so finishing the remaining layers
+    would be pure waste.  Raised by ``CompiledCNN.__call__`` when its
+    ``should_abort`` callback returns True between layers."""
+
+
+class ExecutableCache:
+    """Shareable ``(layer spec, bucket) → compiled executable`` map.
+
+    ``CompiledCNN`` keys executables on the full layer identity —
+    (block, bits, shift, channels, geometry, mesh, bucket) — so the
+    cache is content-addressed: two *plans* whose layers coincide can
+    safely share one cache and every coinciding (layer, bucket) pair
+    compiles exactly once.  The async gateway routes every registered
+    plan through one ``ExecutableCache`` for exactly this reason.
+
+    Thread-safe: lookups/inserts take a lock; compilation itself runs
+    outside it (two racing threads may both compile the same key — the
+    first insert wins and the duplicate is dropped, a benign waste, not
+    a correctness hazard).
+    """
+
+    def __init__(self):
+        self._execs: Dict[tuple, object] = {}
+        self._lock = threading.Lock()
+        self.compiles = 0              # builds that entered the cache
+        self.hits = 0                  # lookups served without building
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._execs)
+
+    def __contains__(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._execs
+
+    def get_or_build(self, key: tuple, build: Callable[[], object]):
+        with self._lock:
+            exe = self._execs.get(key)
+        if exe is not None:
+            with self._lock:
+                self.hits += 1
+            return exe
+        exe = build()                  # compile outside the lock
+        with self._lock:
+            winner = self._execs.setdefault(key, exe)
+            if winner is exe:
+                self.compiles += 1
+        return winner
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"executables": len(self._execs),
+                    "compiles": self.compiles, "hits": self.hits}
 
 
 def bucket_ladder(max_batch: int) -> Tuple[int, ...]:
@@ -61,7 +128,8 @@ class CompiledCNN:
     """AOT-compiled, batch-bucketed executor for one CNN deployment."""
 
     def __init__(self, cfg: CNNConfig, params, blocks: Sequence[BlockLike],
-                 *, max_batch: int = 16, mesh=None, warmup: bool = True):
+                 *, max_batch: int = 16, mesh=None, warmup: bool = True,
+                 exec_cache: Optional[ExecutableCache] = None):
         blocks = [get_block(b) for b in blocks]
         if len(blocks) != len(cfg.layers):
             raise ValueError(
@@ -73,17 +141,25 @@ class CompiledCNN:
         self.max_batch = max_batch
         self.buckets = bucket_ladder(max_batch)
         self.mesh = mesh
+        # executables shard differently per mesh, so the mesh is part of
+        # the cache key.  The mesh object itself (hashable, compared by
+        # devices + axis names) — not id(), whose recycled addresses
+        # could alias two different meshes in a long-lived shared cache
+        self._mesh_token = mesh
 
         spec0 = cfg.layers[0]
         self.in_shape = (cfg.img_h, cfg.img_w, spec0.in_channels)
         self.in_dtype = conv2d.container_dtype(spec0.data_bits)
 
         # (layer key, bucket) → compiled executable; identical layer
-        # specs share one compile per bucket
-        self._execs: Dict[tuple, object] = {}
-        self.compiles = 0
+        # specs share one compile per bucket — across *instances* too
+        # when an ``exec_cache`` is passed in (multi-plan serving)
+        self.cache = exec_cache if exec_cache is not None \
+            else ExecutableCache()
+        self.compiles = 0              # compiles this instance performed
         self.bucket_hits: Dict[int, int] = {b: 0 for b in self.buckets}
         self.calls = 0
+        self._stats_lock = threading.Lock()
         if warmup:
             self.warmup()
 
@@ -91,7 +167,9 @@ class CompiledCNN:
     @classmethod
     def from_plan(cls, plan, cfg: Optional[CNNConfig] = None, *,
                   params=None, key=None, max_batch: int = 16, mesh=None,
-                  warmup: bool = True) -> "CompiledCNN":
+                  warmup: bool = True,
+                  exec_cache: Optional[ExecutableCache] = None
+                  ) -> "CompiledCNN":
         """Executor for a planned deployment: each layer runs the
         (block, bits) the planner assigned.  ``cfg`` defaults to the
         network embedded in the plan (always present on planner output
@@ -103,7 +181,7 @@ class CompiledCNN:
             key = key if key is not None else jax.random.PRNGKey(0)
             params = init_cnn(key, pcfg)
         return cls(pcfg, params, plan.block_names(), max_batch=max_batch,
-                   mesh=mesh, warmup=warmup)
+                   mesh=mesh, warmup=warmup, exec_cache=exec_cache)
 
     @classmethod
     def from_json(cls, text: str, **kw) -> "CompiledCNN":
@@ -116,33 +194,31 @@ class CompiledCNN:
         spec = self.cfg.layers[i]
         return (self.blocks[i].name, spec.data_bits, spec.coeff_bits,
                 spec.shift, spec.in_channels, spec.out_channels,
-                self.cfg.img_h, self.cfg.img_w, bucket)
+                self.cfg.img_h, self.cfg.img_w, self._mesh_token, bucket)
 
     def _compile_layer(self, i: int, bucket: int):
-        key = self._layer_key(i, bucket)
-        exe = self._execs.get(key)
-        if exe is not None:
-            return exe
         spec, blk, mesh = self.cfg.layers[i], self.blocks[i], self.mesh
 
-        def layer(w, x):
-            if mesh is not None:
-                from repro.parallel.sharding import cnn_batch_sharding
-                sh = cnn_batch_sharding(mesh, x.shape[0])
-                x = jax.lax.with_sharding_constraint(x, sh)
-            acc = blk.apply_batched(x, w, data_bits=spec.data_bits,
-                                    coeff_bits=spec.coeff_bits)
-            return _requantize(acc, spec)
+        def build():
+            def layer(w, x):
+                if mesh is not None:
+                    from repro.parallel.sharding import cnn_batch_sharding
+                    sh = cnn_batch_sharding(mesh, x.shape[0])
+                    x = jax.lax.with_sharding_constraint(x, sh)
+                acc = blk.apply_batched(x, w, data_bits=spec.data_bits,
+                                        coeff_bits=spec.coeff_bits)
+                return _requantize(acc, spec)
 
-        w = self.params[i]
-        x_sds = jax.ShapeDtypeStruct(
-            (bucket, self.cfg.img_h, self.cfg.img_w, spec.in_channels),
-            conv2d.container_dtype(spec.data_bits))
-        w_sds = jax.ShapeDtypeStruct(w.shape, w.dtype)
-        exe = jax.jit(layer).lower(w_sds, x_sds).compile()
-        self._execs[key] = exe
-        self.compiles += 1
-        return exe
+            w = self.params[i]
+            x_sds = jax.ShapeDtypeStruct(
+                (bucket, self.cfg.img_h, self.cfg.img_w, spec.in_channels),
+                conv2d.container_dtype(spec.data_bits))
+            w_sds = jax.ShapeDtypeStruct(w.shape, w.dtype)
+            with self._stats_lock:
+                self.compiles += 1
+            return jax.jit(layer).lower(w_sds, x_sds).compile()
+
+        return self.cache.get_or_build(self._layer_key(i, bucket), build)
 
     def warmup(self) -> "CompiledCNN":
         """AOT-compile every (layer, bucket) executable now, so no call
@@ -154,7 +230,7 @@ class CompiledCNN:
 
     @property
     def warmed_up(self) -> bool:
-        return all(self._layer_key(i, b) in self._execs
+        return all(self._layer_key(i, b) in self.cache
                    for b in self.buckets
                    for i in range(len(self.cfg.layers)))
 
@@ -166,7 +242,7 @@ class CompiledCNN:
                 return b
         raise ValueError(f"batch {n} exceeds max_batch={self.max_batch}")
 
-    def _run_bucket(self, xb):
+    def _run_bucket(self, xb, should_abort=None):
         """xb: (n, H, W, C) with n ≤ max_batch → (n, H, W, C_out)."""
         n = xb.shape[0]
         bucket = self.bucket_for(n)
@@ -178,15 +254,25 @@ class CompiledCNN:
             xb = jax.device_put(xb, cnn_batch_sharding(self.mesh, bucket))
         act = xb
         for i in range(len(self.cfg.layers)):
+            if should_abort is not None and should_abort():
+                raise DispatchAborted(
+                    f"dispatch abandoned before layer {i} "
+                    f"(all served requests cancelled)")
             act = self._compile_layer(i, bucket)(self.params[i], act)
-        self.bucket_hits[bucket] += 1
+        with self._stats_lock:
+            self.bucket_hits[bucket] += 1
         return act[:n]
 
-    def __call__(self, x):
+    def __call__(self, x, *, should_abort=None):
         """x: one (H, W, C) image or an (N, H, W, C) batch of quantized
         container ints.  Batches larger than ``max_batch`` run in
         max_batch-sized chunks (the tail dispatching to its own bucket).
-        Bit-exact vs ``cnn_forward_ref`` at every batch size."""
+        Bit-exact vs ``cnn_forward_ref`` at every batch size.
+
+        ``should_abort`` (optional zero-arg callable) is polled between
+        layers; returning True raises ``DispatchAborted`` — the async
+        gateway's cancellation hook, so a flight whose every request was
+        cancelled mid-execution stops paying for the remaining layers."""
         x = jnp.asarray(x)
         single = x.ndim == 3
         if single:
@@ -199,24 +285,51 @@ class CompiledCNN:
             raise ValueError(
                 f"image dtype {x.dtype} != compiled input container "
                 f"{np.dtype(self.in_dtype).name}")
-        self.calls += 1
+        with self._stats_lock:
+            self.calls += 1
         if x.shape[0] == 0:            # empty queue tick: nothing to run
             last = self.cfg.layers[-1]
             return jnp.zeros(
                 (0, self.cfg.img_h, self.cfg.img_w, last.out_channels),
                 conv2d.container_dtype(last.data_bits))
-        outs = [self._run_bucket(x[s:s + self.max_batch])
+        outs = [self._run_bucket(x[s:s + self.max_batch], should_abort)
                 for s in range(0, x.shape[0], self.max_batch)]
         y = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
         return y[0] if single else y
 
+    # -- workload helpers --------------------------------------------------
+    def sample_images(self, k: int, seed: int = 0):
+        """``k`` random quantized images matching this executor's input
+        contract (shape + container dtype) — the canonical workload
+        generator shared by the launcher, benchmarks, and examples, so
+        the quantization rules live in one place."""
+        from repro.kernels import ops
+        rng = np.random.default_rng(seed)
+        d0 = self.cfg.layers[0].data_bits
+        return [np.asarray(ops.quantize_fixed(
+            rng.integers(0, 1 << (d0 - 1),
+                         self.in_shape).astype(np.float32), d0))
+            for _ in range(k)]
+
     # -- observability -----------------------------------------------------
     def stats(self) -> dict:
+        """Dispatch + compile telemetry.  ``executables``/``cache_*``
+        describe the (possibly shared) ``ExecutableCache``; ``compiles``
+        counts builds *this instance* performed — with a shared cache,
+        a second plan over identical layers reports 0.  Snapshot is
+        lock-consistent under the async drain."""
+        with self._stats_lock:
+            hits = dict(self.bucket_hits)
+            calls = self.calls
+            compiles = self.compiles
+        cache = self.cache.stats()
         return {
             "buckets": list(self.buckets),
-            "bucket_hits": dict(self.bucket_hits),
-            "executables": len(self._execs),
-            "compiles": self.compiles,
-            "calls": self.calls,
+            "bucket_hits": hits,
+            "executables": cache["executables"],
+            "compiles": compiles,
+            "cache_compiles": cache["compiles"],
+            "cache_hits": cache["hits"],
+            "calls": calls,
             "warmed_up": self.warmed_up,
         }

@@ -1,6 +1,19 @@
 from repro.serve.slots import SlotPool
+from repro.serve.policy import (DeadlinePolicy, FifoPolicy,
+                                SchedulingPolicy, get_policy,
+                                list_policies)
 from repro.serve.engine import ServeConfig, Engine, Request
-from repro.serve.cnn_engine import CNNEngine, CNNServeConfig, ImageRequest
+from repro.serve.cnn_engine import (CNNEngine, CNNServeConfig,
+                                    ImageRequest, validate_image)
+from repro.serve.async_engine import (AdmissionQueue, AsyncCNNGateway,
+                                      AsyncRequest, AsyncServeConfig,
+                                      DeadlineExpired, GatewayBacklog,
+                                      RequestCancelled)
 
 __all__ = ["ServeConfig", "Engine", "Request", "SlotPool",
-           "CNNEngine", "CNNServeConfig", "ImageRequest"]
+           "CNNEngine", "CNNServeConfig", "ImageRequest", "validate_image",
+           "SchedulingPolicy", "FifoPolicy", "DeadlinePolicy",
+           "get_policy", "list_policies",
+           "AdmissionQueue", "AsyncCNNGateway", "AsyncRequest",
+           "AsyncServeConfig", "DeadlineExpired", "GatewayBacklog",
+           "RequestCancelled"]

@@ -1,0 +1,565 @@
+"""Async continuous-batching gateway over ``repro.runtime.CompiledCNN``.
+
+The sync ``CNNEngine`` is a *tick loop*: gather whatever occupies the
+slots, run one blocking step, scatter, repeat — fine for offline
+workloads handed over as a list, blind to everything a front door needs
+under live traffic.  ``AsyncCNNGateway`` is the production path, the
+vLLM-style request-level scheduler adapted to feed-forward CNN serving:
+
+  admission     a **bounded** pending queue.  ``submit`` applies
+                backpressure (awaits space); ``submit_nowait`` raises
+                ``GatewayBacklog`` — traffic beyond the bound is
+                refused at the door, never absorbed into an unbounded
+                queue whose tail latency grows without limit.
+  continuous    the drain task launches a new ``CompiledCNN`` bucket
+                dispatch **the moment slots free up** — no global tick.
+                Dispatches run in a worker thread pool, so the event
+                loop keeps admitting, cancelling, and expiring requests
+                while a batch is on-device, and (``max_inflight > 1``)
+                a second batch can overlap the first.
+  deadlines     requests carry optional ``deadline``/``priority``;
+                batches are formed in ``repro.serve.policy`` order
+                (EDF by default here — the *same* policy objects the
+                sync engines accept, so both paths order identically).
+                A request whose deadline passes before its batch
+                launches is **expired** — completed with
+                ``DeadlineExpired``, never silently served late.
+  cancellation  the future returned by ``submit`` supports
+                ``cancel()`` at any point: while queued (slot of the
+                bound is released immediately), or mid-flight (the
+                dispatch polls ``CompiledCNN``'s ``should_abort`` hook
+                and abandons the remaining layers once every request
+                in the flight is cancelled).
+  multi-plan    ``register_plan`` routes any number of
+                ``DeploymentPlan``s through one gateway.  All plans
+                share one ``runtime.ExecutableCache``: two plans whose
+                layer specs coincide share AOT executables instead of
+                compiling per plan.  Each batch is single-plan (plans
+                may differ in geometry/precision); the scheduler picks
+                the plan owning the most urgent pending request.
+
+The scheduling core (``AdmissionQueue``) is deliberately synchronous
+and clock-injected — the admission-bound and deadline invariants are
+property-tested directly, no event loop required.  The asyncio shell
+owns futures and threads.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import heapq
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.compiled import (CompiledCNN, DispatchAborted,
+                                    ExecutableCache)
+from repro.serve import policy as policy_mod
+from repro.serve.cnn_engine import validate_image
+from repro.serve.policy import PolicyLike, get_policy
+from repro.serve.slots import SlotPool
+
+
+class GatewayBacklog(RuntimeError):
+    """Admission refused: the pending queue is at its bound.  The
+    caller sheds load (or uses ``submit`` and waits) — the gateway
+    never buffers beyond its bound."""
+
+
+class DeadlineExpired(RuntimeError):
+    """The request's deadline passed before its batch launched; it was
+    removed from the queue, not served late."""
+
+
+class RequestCancelled(RuntimeError):
+    """The request was cancelled via ``AsyncRequest.cancel`` before a
+    result was produced."""
+
+
+@dataclass(eq=False)               # identity hash: requests live in sets
+class AsyncRequest:
+    """One in-flight gateway request.  ``deadline`` is absolute on the
+    gateway clock (``submit``'s ``deadline`` argument is *relative*
+    seconds and is converted on admission).  All state transitions
+    happen on the gateway's event-loop thread — call ``cancel`` from
+    the loop (schedule with ``call_soon_threadsafe`` from others)."""
+    image: np.ndarray
+    plan_id: str
+    request_id: int = 0
+    priority: int = 0
+    deadline: Optional[float] = None
+    arrived_at: float = 0.0
+    # terminal state, set exactly once by the scheduling core:
+    # pending → done | expired | cancelled | failed
+    status: str = "pending"
+    output: Optional[np.ndarray] = None
+    error: Optional[BaseException] = None
+    _on_done: Optional[Callable[["AsyncRequest"], None]] = field(
+        default=None, repr=False)
+
+    def cancel(self) -> bool:
+        """Cancel a still-pending request (False once terminal).  A
+        queued request frees its admission slot at the next queue
+        operation; a mid-flight one stops the dispatch early if every
+        flight-mate is cancelled too, and its result is discarded."""
+        if self.status != "pending":
+            return False
+        self._finish("cancelled", error=RequestCancelled(
+            f"request {self.request_id} cancelled"))
+        return True
+
+    def _finish(self, status: str, *, output=None, error=None) -> None:
+        if self.status != "pending":      # first terminal state wins
+            return
+        self.status = status
+        self.output = output
+        self.error = error
+        if self._on_done is not None:
+            self._on_done(self)
+
+
+class AdmissionQueue:
+    """Bounded, policy-ordered pending set with deadline expiry — the
+    synchronous scheduling core of the gateway.
+
+    Invariants (property-tested in ``tests/test_async_serve.py``):
+
+    * live pending count never exceeds ``max_pending`` — ``admit``
+      refuses first;
+    * ``pop_batch`` never returns a request whose deadline has passed —
+      expired requests are finished with ``DeadlineExpired`` instead;
+    * cancelled requests are never returned either (lazy heap deletion:
+      terminal entries are dropped whenever they surface).
+    """
+
+    def __init__(self, max_pending: int, policy: PolicyLike = "edf"):
+        if max_pending < 1:
+            raise ValueError(f"max_pending={max_pending} must be ≥ 1")
+        self.max_pending = max_pending
+        self.policy = get_policy(policy)
+        self._heap: List[Tuple[tuple, int, AsyncRequest]] = []
+        self._seq = 0
+        self._live = 0                 # pending entries (≤ max_pending)
+        self.expired: int = 0          # finished with DeadlineExpired
+
+    def __len__(self) -> int:
+        return self._live
+
+    @property
+    def full(self) -> bool:
+        return self._live >= self.max_pending
+
+    def note_terminal(self) -> None:
+        """A queued request reached a terminal state outside the queue
+        (cancel): its admission slot is free immediately."""
+        self._live -= 1
+
+    def admit(self, req: AsyncRequest, now: float) -> bool:
+        """Queue ``req``; False when at the bound (caller backpressures
+        or rejects).  A request already past its deadline is expired on
+        the spot — it never occupies a slot of the bound."""
+        if policy_mod.expired(req, now):
+            self.expired += 1
+            req._finish("expired", error=DeadlineExpired(
+                f"request {req.request_id} deadline predates admission"))
+            return True                # handled (terminally), not queued
+        if self.full:
+            return False
+        heapq.heappush(
+            self._heap, (self.policy.key(req, self._seq, now),
+                         self._seq, req))
+        self._seq += 1
+        self._live += 1
+        return True
+
+    def pop_batch(self, max_n: int, now: float
+                  ) -> Tuple[Optional[str], List[AsyncRequest]]:
+        """Form the next single-plan batch: the most urgent pending
+        request picks the plan, then up to ``max_n`` requests of *that
+        plan* follow in policy order.  Other plans' requests are held
+        back for the next batch with their original heap entries (keys
+        and arrival order preserved exactly).  Terminal entries are
+        dropped lazily; overdue ones are expired here — ``pop_batch``
+        never returns a request that is already too late."""
+        held: List[Tuple[tuple, int, AsyncRequest]] = []
+        batch: List[AsyncRequest] = []
+        plan_id: Optional[str] = None
+        while len(batch) < max_n and self._heap:
+            key, seq, req = heapq.heappop(self._heap)
+            if req.status != "pending":   # cancelled while queued
+                continue                  # (bound slot already released)
+            if policy_mod.expired(req, now):
+                self._live -= 1
+                self.expired += 1
+                req._finish("expired", error=DeadlineExpired(
+                    f"request {req.request_id} expired after "
+                    f"{now - req.arrived_at:.3f}s in queue"))
+                continue
+            if plan_id is None:
+                plan_id = req.plan_id
+            if req.plan_id != plan_id:
+                held.append((key, seq, req))
+                continue
+            self._live -= 1
+            batch.append(req)
+        for entry in held:
+            heapq.heappush(self._heap, entry)
+        return plan_id, batch
+
+
+@dataclass
+class AsyncServeConfig:
+    max_batch: int = 8             # slot-pool size = top AOT bucket
+    max_pending: int = 64          # admission bound (queued, not in-flight)
+    max_inflight: int = 1          # concurrent bucket dispatches
+    policy: PolicyLike = "edf"     # batch-formation order
+    aot_warmup: bool = True        # pre-compile all buckets at register
+
+
+class _PlanEntry:
+    def __init__(self, plan_id: str, compiled: CompiledCNN):
+        self.plan_id = plan_id
+        self.compiled = compiled
+        self.served = 0
+
+
+class AsyncCNNGateway(SlotPool):
+    """The asyncio front door.  Request lifecycle::
+
+        fut = await gw.submit(img)        # backpressure at the bound
+        out = await fut                   # (H, W, C_out) container ints
+
+    The gateway is also an (async) context manager::
+
+        async with AsyncCNNGateway.from_plan(plan) as gw:
+            ...
+
+    Slot accounting rides on ``SlotPool``: in-flight requests occupy
+    slots, ``release`` wakes the drain task through a release hook, and
+    the occupancy histogram / ``stats()`` telemetry is shared with the
+    sync engines (bounded + thread-safe by construction).
+    """
+
+    def __init__(self, cfg: Optional[AsyncServeConfig] = None, *,
+                 clock: Callable[[], float] = time.monotonic):
+        cfg = cfg if cfg is not None else AsyncServeConfig()
+        super().__init__(cfg.max_batch)
+        if cfg.max_inflight < 1:
+            raise ValueError(f"max_inflight={cfg.max_inflight} must be ≥ 1")
+        self.cfg = cfg
+        self.clock = clock
+        self.queue = AdmissionQueue(cfg.max_pending, cfg.policy)
+        self.plans: Dict[str, _PlanEntry] = {}
+        self.exec_cache = ExecutableCache()   # shared across all plans
+        self._default_plan: Optional[str] = None
+        self._executor = ThreadPoolExecutor(
+            max_workers=cfg.max_inflight,
+            thread_name_prefix="repro-serve")
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._space: Optional[asyncio.Event] = None
+        self._drain_task: Optional[asyncio.Task] = None
+        self._closing = False
+        self._inflight = 0             # dispatches currently launched
+        self._next_id = 0
+        # counters (all mutated on the loop thread; read anywhere)
+        self.served = 0
+        self.rejected = 0
+        self.cancelled = 0
+        self.aborted_dispatches = 0
+
+    # -- plan registry ----------------------------------------------------
+    def register_plan(self, plan, *, plan_id: Optional[str] = None,
+                      params=None, key=None, mesh=None,
+                      compiled: Optional[CompiledCNN] = None) -> str:
+        """Route ``plan`` through this gateway.  All registered plans
+        compile into the gateway's shared ``ExecutableCache`` — layers
+        that coincide across plans (same block/bits/geometry) reuse one
+        executable per bucket, so registering a second near-identical
+        plan is nearly free.  The first registered plan is the default
+        target for ``submit``."""
+        if plan_id is None:
+            plan_id = f"plan{len(self.plans)}"
+        if plan_id in self.plans:
+            raise ValueError(f"plan id {plan_id!r} already registered")
+        if compiled is None:
+            compiled = CompiledCNN.from_plan(
+                plan, params=params, key=key, mesh=mesh,
+                max_batch=self.cfg.max_batch, warmup=self.cfg.aot_warmup,
+                exec_cache=self.exec_cache)
+        elif compiled.max_batch < self.cfg.max_batch:
+            raise ValueError(
+                f"compiled max_batch={compiled.max_batch} smaller than "
+                f"the slot pool ({self.cfg.max_batch})")
+        self.plans[plan_id] = _PlanEntry(plan_id, compiled)
+        if self._default_plan is None:
+            self._default_plan = plan_id
+        return plan_id
+
+    @classmethod
+    def from_plan(cls, plan, cfg: Optional[AsyncServeConfig] = None, *,
+                  plan_id: Optional[str] = None, params=None, key=None,
+                  mesh=None, clock: Callable[[], float] = time.monotonic
+                  ) -> "AsyncCNNGateway":
+        gw = cls(cfg, clock=clock)
+        gw.register_plan(plan, plan_id=plan_id, params=params, key=key,
+                         mesh=mesh)
+        return gw
+
+    def _entry(self, plan_id: Optional[str]) -> _PlanEntry:
+        pid = plan_id if plan_id is not None else self._default_plan
+        if pid is None:
+            raise RuntimeError("no plan registered "
+                               "(call register_plan first)")
+        try:
+            return self.plans[pid]
+        except KeyError:
+            raise ValueError(
+                f"unknown plan id {pid!r}; registered: "
+                f"{sorted(self.plans)}") from None
+
+    # -- lifecycle --------------------------------------------------------
+    def _ensure_started(self) -> None:
+        loop = asyncio.get_running_loop()
+        if self._loop is None:
+            self._loop = loop
+            self._wake = asyncio.Event()
+            self._space = asyncio.Event()
+            self._space.set()
+            # a freed slot can mean "next batch can launch": wake the
+            # drain task from whatever thread released the slot
+            self.add_release_hook(lambda: loop.call_soon_threadsafe(
+                self._wake.set))
+            self._drain_task = loop.create_task(self._drain())
+        elif self._loop is not loop:
+            raise RuntimeError("gateway is bound to a different event loop")
+
+    async def __aenter__(self) -> "AsyncCNNGateway":
+        self._ensure_started()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    async def close(self) -> None:
+        """Drain what is queued, then stop the drain task."""
+        if self._drain_task is None:
+            self._executor.shutdown(wait=True)
+            return
+        self._closing = True
+        self._wake.set()
+        self._space.set()             # backpressure waiters must not hang
+        await self._drain_task
+        self._executor.shutdown(wait=True)
+
+    # -- admission --------------------------------------------------------
+    def _make_request(self, image, plan_id, priority, deadline
+                      ) -> Tuple[AsyncRequest, "asyncio.Future"]:
+        entry = self._entry(plan_id)
+        img = validate_image(image, entry.compiled.in_shape,
+                             entry.compiled.in_dtype, self._next_id)
+        now = self.clock()
+        req = AsyncRequest(
+            image=img, plan_id=entry.plan_id, request_id=self._next_id,
+            priority=priority,
+            deadline=None if deadline is None else now + deadline,
+            arrived_at=now)
+        self._next_id += 1
+        fut: asyncio.Future = self._loop.create_future()
+
+        def on_done(r: AsyncRequest, fut=fut) -> None:
+            if fut.done():
+                return
+            if r.status == "done":
+                fut.set_result(r.output)
+            elif r.status == "cancelled":
+                fut.cancel()
+            else:
+                fut.set_exception(r.error)
+
+        req._on_done = on_done
+        # a caller cancelling the *future* cancels the request too
+        fut.add_done_callback(
+            lambda f, r=req: r.cancel() if f.cancelled() else None)
+        return req, fut
+
+    def submit_nowait(self, image, *, plan_id: Optional[str] = None,
+                      priority: int = 0, deadline: Optional[float] = None
+                      ) -> "asyncio.Future":
+        """Admit one image or raise ``GatewayBacklog`` when the pending
+        queue is at its bound (load shedding).  ``deadline`` is relative
+        seconds from now; the returned future resolves to the output
+        activations, raises ``DeadlineExpired``, or is cancelled."""
+        self._ensure_started()
+        if self._closing:
+            raise RuntimeError("gateway is closing")
+        req, fut = self._make_request(image, plan_id, priority, deadline)
+        if not self.queue.admit(req, self.clock()):
+            self.rejected += 1
+            raise GatewayBacklog(
+                f"pending queue at its bound "
+                f"({self.queue.max_pending}); retry with backoff or "
+                f"use `await submit(...)` for backpressure")
+        self._bookkeep_admitted(req)
+        return fut
+
+    async def submit(self, image, *, plan_id: Optional[str] = None,
+                     priority: int = 0, deadline: Optional[float] = None
+                     ) -> "asyncio.Future":
+        """Admit one image, **awaiting** while the queue is at its
+        bound — backpressure propagates to the producer instead of
+        growing the queue.  The request (and its validation) is built
+        once; only admission retries.  Its deadline stays anchored to
+        the first attempt — time spent waiting for space counts against
+        it, so backpressure cannot smuggle a request past its SLA."""
+        self._ensure_started()
+        if self._closing:
+            raise RuntimeError("gateway is closing")
+        req, fut = self._make_request(image, plan_id, priority, deadline)
+        while True:
+            if self.queue.admit(req, self.clock()):
+                self._bookkeep_admitted(req)
+                return fut
+            self._space.clear()
+            if self._closing:
+                raise RuntimeError("gateway is closing")
+            if not self.queue.full:   # space freed before the clear —
+                continue              # re-check avoids a lost wakeup
+            await self._space.wait()
+
+    def _bookkeep_admitted(self, req: AsyncRequest) -> None:
+        if req.status == "pending":
+            # queued: wake the drain task
+            orig = req._on_done
+
+            def on_done(r, orig=orig):
+                if r.status == "cancelled":
+                    self.cancelled += 1
+                    if r not in self._inflight_set:
+                        self.queue.note_terminal()
+                        self._signal_space()
+                orig(r)
+
+            req._on_done = on_done
+            self._wake.set()
+        # expired-on-admission requests already finished via _on_done
+
+    def _signal_space(self) -> None:
+        if self._space is not None and not self.queue.full:
+            self._space.set()
+
+    # -- the continuous drain ---------------------------------------------
+    @property
+    def _inflight_set(self):
+        return {r for r in self.active if r is not None}
+
+    async def _drain(self) -> None:
+        loop = self._loop
+        pending_flights = set()
+        while True:
+            self._wake.clear()
+            free = self.free_slots()
+            launched = False
+            # Only form a batch when a dispatch can actually *start*
+            # (inflight < max_inflight): launching into a busy executor
+            # would fragment what could be one full batch into slivers.
+            if free > 0 and len(self.queue) > 0 \
+                    and self._inflight < self.cfg.max_inflight:
+                plan_id, batch = self.queue.pop_batch(free, self.clock())
+                self._signal_space()
+                if batch:
+                    slots = [self.occupy(r) for r in batch]
+                    self._inflight += 1
+                    flight = loop.create_task(self._run_batch(
+                        self.plans[plan_id], batch, slots))
+                    pending_flights.add(flight)
+                    flight.add_done_callback(pending_flights.discard)
+                    launched = True
+            if launched:
+                continue              # immediately try to form another
+            if self._closing and len(self.queue) == 0 \
+                    and not pending_flights:
+                return
+            await self._wake.wait()
+
+    async def _run_batch(self, entry: _PlanEntry, batch, slots) -> None:
+        compiled = entry.compiled
+        alive = [r for r in batch if r.status == "pending"]
+        try:
+            if alive:
+                images = np.stack([np.asarray(r.image, compiled.in_dtype)
+                                   for r in alive])
+
+                def abort() -> bool:
+                    return all(r.status != "pending" for r in alive)
+
+                try:
+                    out = await self._loop.run_in_executor(
+                        self._executor,
+                        lambda: np.asarray(
+                            compiled(images, should_abort=abort)))
+                except DispatchAborted:
+                    self.aborted_dispatches += 1
+                    out = None
+                except Exception as e:        # noqa: BLE001 — a failed
+                    # dispatch must fail its requests, never strand
+                    # their futures in a forever-pending state
+                    for r in alive:
+                        r._finish("failed", error=e)
+                    out = None
+                if out is not None:
+                    for k, r in enumerate(alive):
+                        if r.status == "pending":
+                            r._finish("done", output=out[k])
+                            self.served += 1
+                            entry.served += 1
+                    self._note_step(len(alive))
+        finally:
+            self._inflight -= 1
+            for s in slots:
+                self.release(s)       # hooks re-wake the drain task
+            self._signal_space()
+
+    # -- sugar ------------------------------------------------------------
+    async def infer(self, image, **kw) -> np.ndarray:
+        """Submit and await the result in one call."""
+        fut = await self.submit(image, **kw)
+        return await fut
+
+    # the gateway reuses SlotPool's slot bookkeeping + telemetry, but its
+    # serving interface is submit/infer — the sync drain entry points
+    # would silently mis-admit (async submit has a different signature)
+    def run(self, requests, **kw):
+        raise TypeError(
+            "AsyncCNNGateway has no sync drain — submit requests with "
+            "`await gw.submit(img)` / `gw.submit_nowait(img)` (or use "
+            "repro.serve.CNNEngine for list workloads)")
+
+    def step(self):
+        raise TypeError("AsyncCNNGateway dispatches continuously; "
+                        "there is no manual step()")
+
+    # -- observability ----------------------------------------------------
+    def stats(self) -> dict:
+        """Gateway counters + the SlotPool occupancy histogram + the
+        shared-cache compile telemetry (one entry per distinct
+        (layer, bucket) across *all* registered plans)."""
+        return {
+            "plans": {pid: e.served for pid, e in self.plans.items()},
+            "served": self.served,
+            "rejected": self.rejected,
+            "expired": self.queue.expired,
+            "cancelled": self.cancelled,
+            "aborted_dispatches": self.aborted_dispatches,
+            "pending": len(self.queue),
+            "max_pending": self.queue.max_pending,
+            "max_batch": self.max_batch,
+            "max_inflight": self.cfg.max_inflight,
+            "policy": self.queue.policy.name,
+            "steps": self.steps,
+            "occupancy_hist": dict(self.occupancy_hist),
+            "exec_cache": self.exec_cache.stats(),
+        }

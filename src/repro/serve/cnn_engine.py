@@ -45,8 +45,36 @@ class CNNServeConfig:
 class ImageRequest:
     image: np.ndarray              # (H, W, C) quantized container ints
     request_id: int = 0
+    priority: int = 0              # higher = more urgent (policy="edf")
+    deadline: Optional[float] = None   # absolute engine-clock deadline
     output: Optional[np.ndarray] = None
     done: bool = False
+
+
+def validate_image(img, in_shape, in_dtype, request_id=0) -> np.ndarray:
+    """Shape + dtype admission check shared by the sync engine and the
+    async gateway.  A float image must carry exact container-range
+    integers — the seed's silent ``np.asarray(img, in_dtype)``
+    truncation (0.9 → 0, 200.0 → -56 for int8) is a ``ValueError``
+    here, as is any value that would wrap in the container."""
+    img = np.asarray(img)
+    if tuple(img.shape) != tuple(in_shape):
+        raise ValueError(
+            f"request {request_id}: image shape {tuple(img.shape)} "
+            f"!= engine input {tuple(in_shape)}")
+    if not np.issubdtype(img.dtype, np.integer):
+        if not np.all(np.isfinite(img)) or np.any(img != np.round(img)):
+            raise ValueError(
+                f"request {request_id}: image dtype {img.dtype} "
+                f"carries non-integral values — quantize explicitly "
+                f"(e.g. ops.quantize_fixed) before submitting")
+    info = np.iinfo(in_dtype)
+    if np.any(img < info.min) or np.any(img > info.max):
+        raise ValueError(
+            f"request {request_id}: image values outside the "
+            f"{np.dtype(in_dtype).name} container range "
+            f"[{info.min}, {info.max}] — would wrap, not clamp")
+    return img
 
 
 class CNNEngine(SlotPool):
@@ -98,28 +126,10 @@ class CNNEngine(SlotPool):
     def submit(self, req: ImageRequest) -> bool:
         """Place a request into a free slot; False when the pool is full
         (the request waits in the caller's queue for the next step).
-        Shape AND dtype are validated: a float image must carry exact
-        container-representable integers — the seed's silent
-        ``np.asarray(img, in_dtype)`` truncation (0.9 → 0, 200.0 → -56
-        for int8) is now a ``ValueError``."""
-        img = np.asarray(req.image)
-        if tuple(img.shape) != self.in_shape:
-            raise ValueError(
-                f"request {req.request_id}: image shape {tuple(img.shape)} "
-                f"!= engine input {self.in_shape}")
-        if not np.issubdtype(img.dtype, np.integer):
-            if not np.all(np.isfinite(img)) \
-                    or np.any(img != np.round(img)):
-                raise ValueError(
-                    f"request {req.request_id}: image dtype {img.dtype} "
-                    f"carries non-integral values — quantize explicitly "
-                    f"(e.g. ops.quantize_fixed) before submitting")
-        info = np.iinfo(self.in_dtype)
-        if np.any(img < info.min) or np.any(img > info.max):
-            raise ValueError(
-                f"request {req.request_id}: image values outside the "
-                f"{np.dtype(self.in_dtype).name} container range "
-                f"[{info.min}, {info.max}] — would wrap, not clamp")
+        Shape AND dtype are validated via ``validate_image`` — the
+        admission contract the async gateway shares."""
+        validate_image(req.image, self.in_shape, self.in_dtype,
+                       req.request_id)
         slot = self._free_slot()
         if slot is None:
             return False
@@ -141,7 +151,7 @@ class CNNEngine(SlotPool):
         for k, (i, r) in enumerate(live):
             r.output = out[k]
             r.done = True
-            self.active[i] = None
+            self.release(i)
         self._note_step(len(live))
         self.images_served += len(live)
         return len(live)

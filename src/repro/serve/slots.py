@@ -1,30 +1,46 @@
 """Shared fixed-slot-pool discipline for the serving engines.
 
-Both engines (transformer continuous batching in ``repro.serve.engine``
-and CNN dynamic batching in ``repro.serve.cnn_engine``) run the same
-loop: a fixed pool of ``max_batch`` request slots, a queue that
-backfills free slots between ticks, and one engine ``step`` per tick
-over the occupied slots.  The seed duplicated that bookkeeping in both
-engines — and drained the queue with ``list.pop(0)``, O(n²) over a
-workload.  ``SlotPool`` centralizes it:
+All engines (transformer continuous batching in ``repro.serve.engine``,
+CNN dynamic batching in ``repro.serve.cnn_engine``, and the async
+continuous-batching gateway in ``repro.serve.async_engine``) run the
+same bookkeeping: a fixed pool of ``max_batch`` request slots, a queue
+that backfills free slots, and one engine ``step`` per drain over the
+occupied slots.  The seed duplicated that in both sync engines — and
+drained the queue with ``list.pop(0)``, O(n²) over a workload.
+``SlotPool`` centralizes it:
 
   slots       ``active`` (fixed-size list of Optional requests),
-              ``_free_slot``, ``live`` (occupied (slot, request) pairs)
-  drain loop  ``run`` — deque-backed queue backfill + step until both
-              queue and pool are empty (O(n) queue handling)
-  telemetry   ``occupancy_hist`` — live-slot histogram per step, so the
-              realized batch distribution (and thus what bucketed
-              dispatch buys) is observable via ``stats``
+              ``_free_slot``/``free_slots``, ``occupy``/``release``,
+              ``live`` (occupied (slot, request) pairs)
+  drain loop  ``run`` — heap-ordered queue backfill + step until both
+              queue and pool are empty.  The ordering comes from a
+              shared ``repro.serve.policy`` policy (FIFO by default —
+              a pre-sorted heap, so the seed's O(n) drain is kept);
+              the async gateway uses the *same* policies, so sync and
+              async order work identically.
+  telemetry   ``occupancy_hist`` — live-slot histogram per step.  The
+              backing store is a **fixed array of ``max_batch``
+              counters** (a subclass reporting a bogus occupancy is
+              clamped into range, never a new key), and every update
+              and snapshot takes ``_stats_lock`` — ``stats()`` is safe
+              to call from another thread while the async drain is
+              mid-step, and two threads noting steps never lose counts.
 
 Subclasses implement ``submit`` (admission + request validation) and
 ``step`` (one tick over the pool), calling ``_note_step(live)`` so the
-occupancy histogram stays current.
+occupancy histogram stays current.  ``add_release_hook`` lets an async
+owner be woken (e.g. ``loop.call_soon_threadsafe``) whenever capacity
+frees — the async gateway's waiters block on exactly that signal.
 """
 
 from __future__ import annotations
 
-from collections import deque
-from typing import Dict, List, Optional, Sequence
+import heapq
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.serve.policy import PolicyLike, get_policy
 
 
 class SlotPool:
@@ -35,10 +51,14 @@ class SlotPool:
                 f"pool can never drain its queue)")
         self.max_batch = max_batch
         self.active: List[Optional[object]] = [None] * max_batch
-        # realized live-slot counts: occupancy_hist[k] = steps that ran
-        # with exactly k occupied slots (k ≥ 1; empty ticks don't step)
-        self.occupancy_hist: Dict[int, int] = {}
+        # realized live-slot counts: _occupancy[k-1] = steps that ran
+        # with exactly k occupied slots (k ≥ 1; empty ticks don't step).
+        # Fixed-size by construction — the histogram can never grow a
+        # key per distinct batch size an engine happens to report.
+        self._occupancy = [0] * max_batch
         self.steps = 0
+        self._stats_lock = threading.Lock()
+        self._release_hooks: List[Callable[[], None]] = []
 
     # -- slot bookkeeping ------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -47,14 +67,52 @@ class SlotPool:
                 return i
         return None
 
+    def free_slots(self) -> int:
+        """How many slots are currently unoccupied."""
+        return sum(1 for r in self.active if r is None)
+
     def live(self):
         """Occupied (slot, request) pairs, in slot order."""
         return [(i, r) for i, r in enumerate(self.active) if r is not None]
 
+    def occupy(self, req) -> int:
+        """Place ``req`` into the first free slot; raises when full
+        (callers gate on ``free_slots``/``_free_slot`` first)."""
+        slot = self._free_slot()
+        if slot is None:
+            raise RuntimeError("slot pool full")
+        self.active[slot] = req
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Free one slot and wake any release hooks (async waiters)."""
+        self.active[slot] = None
+        for hook in self._release_hooks:
+            hook()
+
+    def add_release_hook(self, hook: Callable[[], None]) -> None:
+        """Run ``hook()`` after every ``release`` — the async gateway
+        registers ``loop.call_soon_threadsafe(...)`` here so coroutines
+        waiting for capacity wake the moment a slot frees."""
+        self._release_hooks.append(hook)
+
+    # -- telemetry -------------------------------------------------------
     def _note_step(self, live: int) -> None:
-        """Record one executed tick over ``live`` occupied slots."""
-        self.steps += 1
-        self.occupancy_hist[live] = self.occupancy_hist.get(live, 0) + 1
+        """Record one executed tick over ``live`` occupied slots.
+        Out-of-range counts clamp to the nearest bucket (the histogram
+        is bounded by construction); thread-safe under the async drain."""
+        k = min(max(int(live), 1), self.max_batch)
+        with self._stats_lock:
+            self.steps += 1
+            self._occupancy[k - 1] += 1
+
+    @property
+    def occupancy_hist(self) -> Dict[int, int]:
+        """Sparse view of the bounded histogram: {live count: steps},
+        zero-count buckets omitted (snapshot — safe to mutate)."""
+        with self._stats_lock:
+            counts = list(self._occupancy)
+        return {k + 1: c for k, c in enumerate(counts) if c}
 
     # -- engine interface ------------------------------------------------
     def submit(self, req) -> bool:
@@ -67,15 +125,34 @@ class SlotPool:
         raise NotImplementedError
 
     # -- the drain loop ---------------------------------------------------
-    def run(self, requests: Sequence) -> List:
+    def run(self, requests: Sequence, *, policy: PolicyLike = None,
+            clock: Callable[[], float] = time.monotonic) -> List:
         """Serve a workload to completion: backfill free slots from the
-        queue, step, repeat.  The queue is a ``collections.deque`` —
-        popping the head is O(1), so a large workload costs O(n), not
-        the seed's O(n²) ``list.pop(0)``."""
+        queue in ``policy`` order, step, repeat.
+
+        The queue is a binary heap on the policy's static sort key.
+        Under the default FIFO policy the keys are the arrival indices,
+        so heapify of the already-ordered list is O(n) and each pop
+        O(log n) — a large workload still costs ~O(n log n), not the
+        seed's O(n²) ``list.pop(0)``.  Pass ``policy="edf"`` (or any
+        ``repro.serve.policy`` policy) for deadline-aware ordering —
+        the *same* policies the async gateway schedules with."""
         requests = list(requests)
-        queue = deque(requests)
-        while queue or any(r is not None for r in self.active):
-            while queue and self.submit(queue[0]):
-                queue.popleft()
+        pol = get_policy(policy)
+        now = clock()
+        heap = [(pol.key(r, i, now), i, r)
+                for i, r in enumerate(requests)]
+        heapq.heapify(heap)
+        head = None                     # popped but not yet admitted
+        while heap or head is not None \
+                or any(r is not None for r in self.active):
+            while True:
+                if head is None:
+                    if not heap:
+                        break
+                    head = heapq.heappop(heap)
+                if not self.submit(head[2]):
+                    break               # pool full / deferred: step first
+                head = None
             self.step()
         return requests

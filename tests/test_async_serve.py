@@ -1,0 +1,421 @@
+"""Async continuous-batching gateway: admission bound and deadline
+invariants (property-tested on the synchronous scheduling core),
+end-to-end bit-exactness, backpressure, cancellation, multi-plan
+routing, and cross-plan executable sharing."""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import deploy
+from repro.core.cnn import (CNNConfig, ConvLayerSpec, cnn_forward_ref,
+                            fitted_block_models, init_cnn)
+from repro.runtime import CompiledCNN, DispatchAborted, ExecutableCache
+from repro.serve import (AdmissionQueue, AsyncCNNGateway, AsyncRequest,
+                         AsyncServeConfig, DeadlineExpired, GatewayBacklog,
+                         get_policy)
+
+
+def _cfg():
+    return CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
+        ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
+    ), img_h=16, img_w=64)
+
+
+def _plan(cfg=None):
+    cfg = cfg if cfg is not None else _cfg()
+    return deploy.plan_deployment(cfg, fitted_block_models(), target=0.8,
+                                  on_infeasible="fallback")
+
+
+def _images(compiled, k, seed=0):
+    return compiled.sample_images(k, seed)
+
+
+def _req(i, *, plan_id="p", priority=0, deadline=None, now=0.0):
+    return AsyncRequest(image=np.zeros(1), plan_id=plan_id, request_id=i,
+                        priority=priority, deadline=deadline,
+                        arrived_at=now)
+
+
+# ---------------------------------------------------------------------------
+# the synchronous scheduling core (no event loop)
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_bound_and_rejection():
+    q = AdmissionQueue(max_pending=3, policy="edf")
+    assert all(q.admit(_req(i), 0.0) for i in range(3))
+    assert q.full and len(q) == 3
+    assert not q.admit(_req(3), 0.0)        # at the bound: refused
+    _, batch = q.pop_batch(2, 0.0)
+    assert [r.request_id for r in batch] == [0, 1]
+    assert len(q) == 1 and not q.full
+    assert q.admit(_req(4), 0.0)
+
+
+def test_admission_queue_expires_instead_of_serving_late():
+    q = AdmissionQueue(max_pending=8, policy="edf")
+    on_time = _req(0, deadline=10.0)
+    late = _req(1, deadline=2.0)
+    assert q.admit(on_time, 0.0) and q.admit(late, 0.0)
+    _, batch = q.pop_batch(8, now=5.0)      # past late's deadline
+    assert [r.request_id for r in batch] == [0]
+    assert late.status == "expired"
+    assert isinstance(late.error, DeadlineExpired)
+    assert q.expired == 1
+    # already-expired on admission: terminal immediately, never queued
+    dead = _req(2, deadline=1.0)
+    assert q.admit(dead, now=5.0)           # handled, not refused
+    assert dead.status == "expired" and len(q) == 0
+
+
+def test_admission_queue_edf_order_and_priority_tiers():
+    q = AdmissionQueue(max_pending=8, policy="edf")
+    q.admit(_req(0, deadline=9.0), 0.0)
+    q.admit(_req(1, deadline=3.0), 0.0)
+    q.admit(_req(2), 0.0)                   # no deadline: last in tier
+    q.admit(_req(3, deadline=99.0, priority=1), 0.0)   # higher tier
+    _, batch = q.pop_batch(8, 0.0)
+    assert [r.request_id for r in batch] == [3, 1, 0, 2]
+
+
+def test_admission_queue_single_plan_batches_hold_others_back():
+    q = AdmissionQueue(max_pending=8, policy="fifo")
+    q.admit(_req(0, plan_id="a"), 0.0)
+    q.admit(_req(1, plan_id="b"), 0.0)
+    q.admit(_req(2, plan_id="a"), 0.0)
+    pid, batch = q.pop_batch(8, 0.0)
+    assert pid == "a" and [r.request_id for r in batch] == [0, 2]
+    # plan b's request kept its place and forms the next batch
+    pid, batch = q.pop_batch(8, 0.0)
+    assert pid == "b" and [r.request_id for r in batch] == [1]
+    assert len(q) == 0
+
+
+def test_admission_queue_cancelled_entries_never_pop():
+    q = AdmissionQueue(max_pending=4, policy="fifo")
+    reqs = [_req(i) for i in range(3)]
+    for r in reqs:
+        q.admit(r, 0.0)
+    assert reqs[1].cancel()
+    q.note_terminal()                       # the gateway's cancel hook
+    assert len(q) == 2
+    _, batch = q.pop_batch(8, 0.0)
+    assert [r.request_id for r in batch] == [0, 2]
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(st.tuples(
+        st.sampled_from(["submit", "pop", "tick", "cancel"]),
+        st.integers(0, 7),                  # pop width / cancel index
+        st.one_of(st.none(), st.floats(0.0, 4.0)),   # relative deadline
+    ), min_size=1, max_size=60)
+else:                                        # pragma: no cover
+    _ops = None
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops_list=_ops, bound=st.integers(1, 6))
+def test_admission_bound_and_deadline_invariants(ops_list, bound):
+    """Property: under any interleaving of submits, pops, clock ticks
+    and cancels, (a) the live pending count never exceeds the bound,
+    (b) a popped batch never contains an expired or cancelled request,
+    and (c) every request ends served-able, expired, cancelled, or
+    refused — never silently late."""
+    q = AdmissionQueue(max_pending=bound, policy="edf")
+    now = 0.0
+    submitted, popped, refused = [], [], []
+    for op, arg, dl in ops_list:
+        if op == "submit":
+            r = _req(len(submitted),
+                     deadline=None if dl is None else now + dl, now=now)
+            if q.admit(r, now):
+                if r.status == "pending":
+                    submitted.append(r)
+            else:
+                refused.append(r)
+            assert len(q) <= bound
+        elif op == "pop":
+            _, batch = q.pop_batch(arg + 1, now)
+            for r in batch:
+                assert r.status == "pending"
+                assert r.deadline is None or r.deadline >= now
+                popped.append(r)
+            assert len(q) <= bound
+        elif op == "tick":
+            now += 0.5 + (0.0 if dl is None else dl)
+        elif op == "cancel":
+            pending = [r for r in submitted
+                       if r.status == "pending" and r not in popped]
+            if pending:
+                r = pending[arg % len(pending)]
+                assert r.cancel()
+                q.note_terminal()
+        assert 0 <= len(q) <= bound
+    # drain: nothing left behind in a non-terminal, non-poppable state
+    _, batch = q.pop_batch(10 ** 6, now)
+    popped.extend(batch)
+    assert len(q) == 0
+    for r in submitted:
+        assert (r in popped and r.status == "pending") \
+            or r.status in ("expired", "cancelled")
+    for r in refused:
+        assert r.status == "pending" and r not in popped
+
+
+# ---------------------------------------------------------------------------
+# the asyncio gateway end-to-end
+# ---------------------------------------------------------------------------
+
+def test_gateway_serves_bit_exact():
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=4, max_pending=16))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 9)
+
+    async def main():
+        async with gw:
+            futs = [await gw.submit(img) for img in imgs]
+            return await asyncio.gather(*futs)
+
+    outs = asyncio.run(main())
+    pcfg = deploy.plan_config(plan)
+    for img, out in zip(imgs, outs):
+        ref = cnn_forward_ref(compiled.params, jnp.asarray(img), pcfg)
+        np.testing.assert_array_equal(out, np.asarray(ref))
+    stats = gw.stats()
+    assert stats["served"] == 9 and stats["pending"] == 0
+    assert sum(k * v for k, v in stats["occupancy_hist"].items()) == 9
+
+
+def test_gateway_backpressure_and_load_shedding():
+    """submit_nowait sheds load at the bound; submit awaits space and
+    completes once the drain frees it."""
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=3))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 12, seed=3)
+
+    async def main():
+        async with gw:
+            # stall the drain so the queue actually fills: submit from
+            # inside one loop iteration without yielding
+            futs, shed = [], 0
+            for img in imgs:
+                try:
+                    futs.append(gw.submit_nowait(img))
+                except GatewayBacklog:
+                    shed += 1
+            assert shed > 0                  # the bound engaged
+            assert gw.stats()["pending"] <= 3
+            # backpressure path: waits for space instead of raising
+            futs.append(await gw.submit(imgs[0]))
+            outs = await asyncio.gather(*futs)
+            return outs, shed
+
+    outs, shed = asyncio.run(main())
+    stats = gw.stats()
+    assert stats["rejected"] == shed
+    assert stats["served"] == len(outs)
+    assert len(outs) == 12 - shed + 1
+
+
+def test_gateway_expired_requests_fail_not_served_late():
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=32))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 3, seed=4)
+
+    async def main():
+        async with gw:
+            # deadline already in the past on admission
+            dead = await gw.submit(imgs[0], deadline=-1.0)
+            ok = await gw.submit(imgs[1], deadline=60.0)
+            with pytest.raises(DeadlineExpired):
+                await dead
+            return await ok
+
+    out = asyncio.run(main())
+    ref = cnn_forward_ref(compiled.params, jnp.asarray(imgs[1]),
+                          deploy.plan_config(plan))
+    np.testing.assert_array_equal(out, np.asarray(ref))
+    assert gw.stats()["expired"] == 1
+
+
+def test_gateway_cancellation_releases_bound_and_skips_serve():
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=4))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 4, seed=5)
+
+    async def main():
+        async with gw:
+            futs = [gw.submit_nowait(img) for img in imgs]
+            futs[2].cancel()
+            done = await asyncio.gather(*futs, return_exceptions=True)
+            return done
+
+    done = asyncio.run(main())
+    assert isinstance(done[2], asyncio.CancelledError)
+    assert [isinstance(d, np.ndarray) for d in done] \
+        == [True, True, False, True]
+    stats = gw.stats()
+    assert stats["cancelled"] == 1 and stats["served"] == 3
+
+
+def test_gateway_multi_plan_routing_and_shared_cache():
+    """Two plans with identical layer specs share every compiled
+    executable (the regression the shared ExecutableCache exists for);
+    requests route to their plan and both serve bit-exactly."""
+    plan = _plan()
+    gw = AsyncCNNGateway(AsyncServeConfig(max_batch=4, max_pending=16))
+    gw.register_plan(plan, plan_id="a")
+    compiles_after_a = gw.exec_cache.compiles
+    assert compiles_after_a > 0
+    gw.register_plan(plan, plan_id="b", key=jax.random.PRNGKey(7))
+    # identical layer specs → zero new executables for plan b
+    assert gw.exec_cache.compiles == compiles_after_a
+    assert gw.plans["b"].compiled.compiles == 0
+    assert gw.plans["b"].compiled.warmed_up
+
+    ca, cb = gw.plans["a"].compiled, gw.plans["b"].compiled
+    imgs = _images(ca, 6, seed=6)
+
+    async def main():
+        async with gw:
+            fa = [await gw.submit(img, plan_id="a") for img in imgs[:3]]
+            fb = [await gw.submit(img, plan_id="b") for img in imgs[3:]]
+            return (await asyncio.gather(*fa), await asyncio.gather(*fb))
+
+    outs_a, outs_b = asyncio.run(main())
+    pcfg = deploy.plan_config(plan)
+    for img, out in zip(imgs[:3], outs_a):
+        np.testing.assert_array_equal(out, np.asarray(
+            cnn_forward_ref(ca.params, jnp.asarray(img), pcfg)))
+    for img, out in zip(imgs[3:], outs_b):
+        np.testing.assert_array_equal(out, np.asarray(
+            cnn_forward_ref(cb.params, jnp.asarray(img), pcfg)))
+    stats = gw.stats()
+    assert stats["plans"] == {"a": 3, "b": 3}
+
+
+def test_gateway_failed_dispatch_fails_futures_instead_of_hanging():
+    """Regression: a dispatch error other than DispatchAborted must
+    propagate into every affected future — stranding them pending would
+    hang clients forever."""
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=4))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 2)
+
+    class _Exploding:
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def __call__(self, *a, **k):
+            raise RuntimeError("device exploded")
+
+    gw.plans["plan0"].compiled = _Exploding(compiled)
+
+    async def main():
+        async with gw:
+            futs = [await gw.submit(img) for img in imgs]
+            return await asyncio.gather(*futs, return_exceptions=True)
+
+    done = asyncio.run(main())
+    assert all(isinstance(d, RuntimeError)
+               and "device exploded" in str(d) for d in done)
+    assert gw.stats()["served"] == 0 and gw.stats()["pending"] == 0
+
+
+def test_gateway_has_no_sync_drain():
+    """The gateway reuses SlotPool bookkeeping but not its sync serving
+    interface — run()/step() fail loudly instead of mis-admitting."""
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=4))
+    with pytest.raises(TypeError, match="no sync drain"):
+        gw.run([])
+    with pytest.raises(TypeError, match="continuously"):
+        gw.step()
+
+
+def test_gateway_validates_images_at_the_door():
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=4))
+
+    async def main():
+        async with gw:
+            with pytest.raises(ValueError, match="image shape"):
+                gw.submit_nowait(np.zeros((3, 3, 1), np.int8))
+            with pytest.raises(ValueError, match="non-integral"):
+                gw.submit_nowait(np.full(
+                    gw.plans["plan0"].compiled.in_shape, 0.5, np.float32))
+            with pytest.raises(ValueError, match="unknown plan id"):
+                gw.submit_nowait(np.zeros((3, 3, 1), np.int8),
+                                 plan_id="nope")
+
+    asyncio.run(main())
+    assert gw.stats()["served"] == 0
+
+
+def test_gateway_policy_matches_sync_engine_ordering():
+    """The gateway and the sync drain schedule identically: same policy
+    object, same keys, same realized order."""
+    pol = get_policy("edf")
+    reqs = [_req(0, deadline=9.0), _req(1, deadline=3.0),
+            _req(2), _req(3, priority=2)]
+    q = AdmissionQueue(max_pending=8, policy=pol)
+    for r in reqs:
+        q.admit(r, 0.0)
+    _, batch = q.pop_batch(8, 0.0)
+    assert [r.request_id for r in batch] \
+        == [r.request_id for r in pol.order(reqs, 0.0)]
+
+
+# ---------------------------------------------------------------------------
+# runtime: shared cache + cancellation-safe dispatch
+# ---------------------------------------------------------------------------
+
+def test_compiled_cnn_shares_executables_across_instances():
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    blocks = [s.block for s in cfg.layers]
+    cache = ExecutableCache()
+    a = CompiledCNN(cfg, params, blocks, max_batch=4, exec_cache=cache)
+    n = cache.compiles
+    assert n == len(cache) == len(a.buckets) * len(cfg.layers)
+    b = CompiledCNN(cfg, params, blocks, max_batch=4, exec_cache=cache)
+    assert cache.compiles == n and b.compiles == 0   # all cache hits
+    assert b.warmed_up
+    x = np.stack(_images(a, 3, seed=8))
+    np.testing.assert_array_equal(np.asarray(a(x)), np.asarray(b(x)))
+
+
+def test_compiled_cnn_dispatch_abort():
+    cfg = _cfg()
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    cnn = CompiledCNN(cfg, params, [s.block for s in cfg.layers],
+                      max_batch=2)
+    x = np.stack(_images(cnn, 1, seed=9))
+    with pytest.raises(DispatchAborted):
+        cnn(x, should_abort=lambda: True)
+    # a non-firing hook changes nothing
+    y = cnn(x, should_abort=lambda: False)
+    ref = cnn_forward_ref(params, jnp.asarray(x), cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))

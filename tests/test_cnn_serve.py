@@ -1,5 +1,6 @@
 """Plan-driven CNN serving engine: slot batching, bit-exact outputs,
-plan construction, and data-parallel sharded execution."""
+plan construction, scheduling-policy ordering, SlotPool telemetry
+bounds/thread-safety, and data-parallel sharded execution."""
 
 import subprocess
 import sys
@@ -194,6 +195,91 @@ def test_engine_rejects_empty_slot_pool():
     with pytest.raises(ValueError, match="max_batch"):
         CNNEngine(cfg, params, [s.block for s in cfg.layers],
                   CNNServeConfig(max_batch=0))
+
+
+# ---------------------------------------------------------------------------
+# shared scheduling policies + SlotPool telemetry
+# ---------------------------------------------------------------------------
+
+def test_engine_run_edf_policy_orders_waves():
+    """The sync drain accepts the same scheduling policies as the async
+    gateway: under policy="edf" the first wave is the most urgent
+    requests, not arrival order."""
+    eng = _engine(max_batch=2)
+    reqs = _requests(eng, 4)
+    reqs[0].deadline = 9.0
+    reqs[1].deadline = 1.0
+    reqs[2].deadline = 2.0
+    reqs[3].priority = 1               # higher tier: runs first
+    order = []
+    orig_step = eng.step
+
+    def spy_step():
+        order.append([r.request_id for _, r in eng.live()])
+        return orig_step()
+
+    eng.step = spy_step
+    eng.run(reqs, policy="edf", clock=lambda: 0.0)
+    assert order == [[3, 1], [2, 0]]
+    assert all(r.done for r in reqs)
+
+
+def test_engine_run_fifo_default_unchanged():
+    eng = _engine(max_batch=2)
+    reqs = _requests(eng, 3)
+    reqs[0].deadline = 99.0            # ignored under FIFO
+    order = []
+    orig_step = eng.step
+
+    def spy_step():
+        order.append([r.request_id for _, r in eng.live()])
+        return orig_step()
+
+    eng.step = spy_step
+    eng.run(reqs)
+    assert order == [[0, 1], [2]]
+
+
+def test_slot_pool_occupancy_hist_is_bounded_and_clamped():
+    """Regression: the histogram used to be an unbounded dict keyed on
+    whatever a subclass reported.  It is now a fixed max_batch-sized
+    array — bogus occupancies clamp into range instead of growing it."""
+    eng = _engine(max_batch=2)
+    eng._note_step(1)
+    eng._note_step(10 ** 9)            # clamps to max_batch
+    eng._note_step(-5)                 # clamps to 1
+    hist = eng.occupancy_hist
+    assert hist == {1: 2, 2: 1}
+    assert len(eng._occupancy) == 2    # fixed backing store
+
+
+def test_slot_pool_stats_thread_safe_under_concurrent_steps():
+    """Two threads hammering _note_step while another snapshots: no
+    lost counts, every snapshot internally consistent."""
+    import threading
+
+    eng = _engine(max_batch=4)
+    N = 2000
+
+    def noter():
+        for _ in range(N):
+            eng._note_step(3)
+
+    threads = [threading.Thread(target=noter) for _ in range(2)]
+    snapshots = []
+
+    def reader():
+        for _ in range(200):
+            snapshots.append(eng.occupancy_hist.get(3, 0))
+
+    r = threading.Thread(target=reader)
+    for t in threads + [r]:
+        t.start()
+    for t in threads + [r]:
+        t.join()
+    assert eng.occupancy_hist[3] == 2 * N
+    assert eng.steps == 2 * N
+    assert snapshots == sorted(snapshots)  # monotone non-decreasing
 
 
 # ---------------------------------------------------------------------------
