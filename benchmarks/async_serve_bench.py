@@ -34,7 +34,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import DEFAULT_SEED, add_seed_argument, emit
 from repro.core import deploy
 from repro.core.cnn import fitted_block_models, quickstart_cnn_config
 from repro.runtime import CompiledCNN
@@ -141,7 +141,8 @@ def _run_gateway(gw: AsyncCNNGateway, imgs, arrivals):
     return asyncio.run(drive())
 
 
-def run(json_path: str | Path = JSON_PATH) -> dict:
+def run(json_path: str | Path = JSON_PATH, *,
+        seed: int = DEFAULT_SEED) -> dict:
     cfg = quickstart_cnn_config()
     plan = deploy.plan_deployment(cfg, fitted_block_models(), target=0.8,
                                   on_infeasible="fallback")
@@ -155,7 +156,7 @@ def run(json_path: str | Path = JSON_PATH) -> dict:
     results = []
     for occ in OCCUPANCIES:
         rate = occ * capacity
-        rng = np.random.default_rng(42)
+        rng = np.random.default_rng(seed)
         arrivals = np.cumsum(rng.exponential(1.0 / rate, REQUESTS))
 
         engine = CNNEngine(compiled.cfg, compiled.params,
@@ -203,6 +204,7 @@ def run(json_path: str | Path = JSON_PATH) -> dict:
     payload = {
         "bench": "async_serve",
         "schema": 1,
+        "seed": seed,
         "max_batch": MAX_BATCH,
         "max_pending": MAX_PENDING,
         "full_batch_step_ms": step_s * 1e3,
@@ -220,4 +222,11 @@ def run(json_path: str | Path = JSON_PATH) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=JSON_PATH,
+                    help=f"output path (default {JSON_PATH})")
+    add_seed_argument(ap)
+    a = ap.parse_args()
+    run(a.json, seed=a.seed)

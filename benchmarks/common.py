@@ -1,10 +1,26 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, seeding."""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
+
+#: the one seed every benchmark defaults to — recorded JSONs are
+#: reproducible runs of this seed unless a ``--seed`` says otherwise
+DEFAULT_SEED = 42
+
+
+def add_seed_argument(parser: argparse.ArgumentParser, *,
+                      default: int = DEFAULT_SEED) -> argparse.ArgumentParser:
+    """Attach the shared ``--seed`` flag (benchmarks that draw traffic
+    traces all spell it the same way)."""
+    parser.add_argument(
+        "--seed", type=int, default=default,
+        help=f"rng seed for generated traffic (default {default}; the "
+             f"committed BENCH jsons use the default)")
+    return parser
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:

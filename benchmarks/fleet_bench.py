@@ -1,0 +1,143 @@
+"""Seeded million-request SLO benchmark for the serving fleet.
+
+One seeded Poisson trace — interactive 20% (deadline 250 ms), batch 30%
+(2 s), best-effort 50% (no deadline, 15 s p99 SLO) — offered at 2.2×
+a single v5e's full-batch capacity, replayed on the virtual clock of
+``repro.fleet.sim`` through four configurations:
+
+  single_v5e    one v5e worker (the pre-fleet deployment).  Overloaded
+                by construction: EDF keeps interactive alive, but batch
+                and best-effort blow their SLOs.
+  round_robin   the heterogeneous edge/v5e/v5p fleet under the naive
+                router — one third of the traffic lands on an edge part
+                with a tenth of the capacity, and every tier's p99
+                collapses under the edge backlog.
+  least_loaded  load-aware, cost-blind placement over the same fleet.
+  plan_aware    the headline: deadline-tight traffic to the fastest
+                admissible worker, best-effort to the cheapest profile
+                that fits.  Meets every per-tier SLO the single worker
+                misses and beats round-robin's deadline-tier p99 by
+                orders of magnitude.
+
+A fifth run drains the v5e worker mid-trace under the plan-aware
+router and pins the graceful-drain invariant: zero admitted requests
+lost, zero re-routed requests served past their deadline.
+
+Everything is virtual-clock and seed-deterministic: the same
+``--seed`` produces a bit-identical ``BENCH_fleet.json`` (the default
+committed artifact is the full 1,000,000-request run; CI replays a
+50,000-request slice and uploads its own copy).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import DEFAULT_SEED, add_seed_argument, emit
+from repro.fleet import SimWorkerSpec, make_trace, profile_speed, simulate
+from repro.fleet.sim import V5E_IMAGE_S, V5E_OVERHEAD_S
+
+REQUESTS = 1_000_000
+MAX_BATCH = 8
+OCCUPANCY = 2.2                  # offered load ÷ single-v5e capacity
+DRAIN_FRACTION = 0.4             # drain v5e this far into the trace
+JSON_PATH = "BENCH_fleet.json"
+
+#: the heterogeneous fleet: one worker per catalog profile
+FLEET_SPECS = (
+    SimWorkerSpec("w0-edge", "edge", ("cnn",), MAX_BATCH),
+    SimWorkerSpec("w1-v5e", "v5e", ("cnn",), MAX_BATCH),
+    SimWorkerSpec("w2-v5p", "v5p", ("cnn",), MAX_BATCH),
+)
+SINGLE_SPEC = (SimWorkerSpec("solo-v5e", "v5e", ("cnn",), MAX_BATCH),)
+
+#: tiers whose deadline makes p99 an SLA, not just a report
+DEADLINE_TIERS = ("interactive", "batch")
+
+
+def v5e_capacity() -> float:
+    """Images/sec of one v5e at full batch — the load unit."""
+    return MAX_BATCH / (V5E_OVERHEAD_S + MAX_BATCH * V5E_IMAGE_S)
+
+
+def run(json_path: str | Path = JSON_PATH, *, requests: int = REQUESTS,
+        seed: int = DEFAULT_SEED) -> dict:
+    rate = OCCUPANCY * v5e_capacity()
+    trace = make_trace(requests, rate, seed=seed)
+    fleet_rate = sum(
+        MAX_BATCH / ((V5E_OVERHEAD_S + MAX_BATCH * V5E_IMAGE_S)
+                     / profile_speed(s.resolve_profile()))
+        for s in FLEET_SPECS)
+    emit("fleet/offered_load", 0.0,
+         f"rate={rate:.0f}img_per_s;requests={requests};"
+         f"fleet_capacity={fleet_rate:.0f}img_per_s")
+
+    runs = {}
+    runs["single_v5e"] = simulate(SINGLE_SPEC, trace, "least_loaded")
+    for router in ("round_robin", "least_loaded", "plan_aware"):
+        runs[router] = simulate(FLEET_SPECS, trace, router)
+    drain = simulate(FLEET_SPECS, trace, "plan_aware",
+                     drain_at=DRAIN_FRACTION * float(trace.arrivals[-1]),
+                     drain_worker="w1-v5e")
+    runs["plan_aware_drain"] = drain
+
+    for name, r in runs.items():
+        for tier, d in r.per_tier.items():
+            emit(f"fleet/{name}_{tier}_p99", d["p99_s"] * 1e6,
+                 f"slo={d['slo_p99_s']}s;met={d['slo_met']}")
+
+    single, rr, pa = runs["single_v5e"], runs["round_robin"], \
+        runs["plan_aware"]
+    single_missed = [t for t, d in single.per_tier.items()
+                     if not d["slo_met"]]
+    acceptance = {
+        # every per-tier SLO the single worker misses, plan-aware meets
+        "single_v5e_missed_tiers": single_missed,
+        "plan_aware_meets_single_missed": all(
+            pa.per_tier[t]["slo_met"] for t in single_missed),
+        "plan_aware_all_slos_met": pa.all_slos_met,
+        # plan-aware beats round-robin on every deadline tier's p99
+        "plan_aware_beats_round_robin_deadline_p99": all(
+            pa.per_tier[t]["p99_s"] < rr.per_tier[t]["p99_s"]
+            for t in DEADLINE_TIERS),
+        # graceful drain: nothing admitted is lost or served late
+        "drain_rerouted": drain.rerouted,
+        "drain_zero_lost": drain.lost == 0
+        and drain.completed == requests,
+        "drain_zero_late_rerouted": drain.late_rerouted == 0,
+    }
+    headline = all(v is not False for v in acceptance.values())
+    emit("fleet/acceptance", 0.0,
+         ";".join(f"{k}={v}" for k, v in acceptance.items()))
+
+    payload = {
+        "bench": "fleet",
+        "schema": 1,
+        "seed": seed,
+        "requests": requests,
+        "max_batch": MAX_BATCH,
+        "occupancy_vs_single_v5e": OCCUPANCY,
+        "offered_rate_per_s": rate,
+        "fleet_capacity_per_s": fleet_rate,
+        "drain_fraction": DRAIN_FRACTION,
+        "runs": {name: r.to_payload() for name, r in runs.items()},
+        "acceptance": acceptance,
+        "accepted": headline,
+    }
+    Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=JSON_PATH,
+                    help=f"output path (default {JSON_PATH})")
+    ap.add_argument("--requests", type=int, default=REQUESTS,
+                    help=f"trace length (default {REQUESTS:,}; CI uses "
+                         f"50000)")
+    add_seed_argument(ap)
+    a = ap.parse_args()
+    run(a.json, requests=a.requests, seed=a.seed)

@@ -210,6 +210,22 @@ class DeploymentPlan:
         return cls.from_json(Path(path).read_text())
 
 
+def device_profile(name: str) -> DeviceProfile:
+    """Look up a catalog part by name (``"edge"`` / ``"v5e"`` / ``"v5p"``).
+
+    Fleet configs and launch flags reference profiles as strings; an
+    unknown name raises ``DeploymentError`` with the available catalog
+    spelled out, instead of the bare ``KeyError`` of
+    ``allocate.get_device`` — a typo in a fleet topology should read as
+    a deployment problem, not a dict miss."""
+    try:
+        return allocate.get_device(name)
+    except KeyError:
+        raise DeploymentError(
+            f"unknown device profile {name!r}; the catalog has: "
+            f"{sorted(d.name for d in DEVICE_CATALOG)}") from None
+
+
 def _as_device(device: Optional[BudgetLike]) -> DeviceProfile:
     if device is None:
         return allocate.V5E

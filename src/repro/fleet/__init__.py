@@ -1,0 +1,78 @@
+"""``repro.fleet`` — plan-aware multi-worker serving fleet.
+
+The layer above ``repro.serve``: where a gateway runs *one* worker's
+continuous-batching loop, the fleet runs *many* gateways — bound to
+heterogeneous device profiles from ``deploy.DEVICE_CATALOG`` — behind
+one ``submit`` front door.  A pluggable ``Router`` places each request
+(the default ``PlanAwareRouter`` sends deadline-tight traffic to the
+fastest admissible worker and best-effort traffic to the cheapest
+profile that still fits), a per-worker health machine ejects workers on
+consecutive failures and probes them back in, and ``Fleet.drain``
+removes a worker gracefully — in-flight batches finish, queued requests
+re-route, nothing admitted is lost.
+
+The same routers drive ``repro.fleet.sim`` — a virtual-clock simulator
+that replays seeded million-request traces for the SLO benchmark
+(``benchmarks/fleet_bench.py``) bit-reproducibly.  See ``docs/fleet.md``.
+"""
+
+from repro.fleet.fleet import (
+    TIER_PRIORITY,
+    Fleet,
+    FleetError,
+    FleetRequest,
+    FleetSaturated,
+    NoWorkerAvailable,
+)
+from repro.fleet.health import HealthPolicy, WorkerHealth
+from repro.fleet.router import (
+    TIERS,
+    LeastLoadedRouter,
+    PlanAwareRouter,
+    RoundRobinRouter,
+    Router,
+    WorkerView,
+    get_router,
+    list_routers,
+)
+from repro.fleet.sim import (
+    DEFAULT_TIERS,
+    SimResult,
+    SimWorkerSpec,
+    TierSpec,
+    Trace,
+    make_trace,
+    profile_speed,
+    simulate,
+)
+from repro.fleet.worker import NOMINAL_V5E_RATE, FleetWorker, nominal_rate
+
+__all__ = [
+    "DEFAULT_TIERS",
+    "Fleet",
+    "FleetError",
+    "FleetRequest",
+    "FleetSaturated",
+    "FleetWorker",
+    "HealthPolicy",
+    "LeastLoadedRouter",
+    "NOMINAL_V5E_RATE",
+    "NoWorkerAvailable",
+    "PlanAwareRouter",
+    "RoundRobinRouter",
+    "Router",
+    "SimResult",
+    "SimWorkerSpec",
+    "TIERS",
+    "TIER_PRIORITY",
+    "TierSpec",
+    "Trace",
+    "WorkerHealth",
+    "WorkerView",
+    "get_router",
+    "list_routers",
+    "make_trace",
+    "nominal_rate",
+    "profile_speed",
+    "simulate",
+]

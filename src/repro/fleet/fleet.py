@@ -1,0 +1,417 @@
+"""``Fleet`` — the plan-aware multi-worker serving front door.
+
+One ``AsyncCNNGateway`` serves one process; a ``Fleet`` serves a
+*heterogeneous set* of them — each worker running its own deployment
+plan on its own ``DeviceProfile`` — behind a single ``submit`` /
+``submit_nowait`` door with the same semantics the gateway has
+(``submit`` awaits admission = backpressure; ``submit_nowait`` raises
+when nothing can take the request = shedding).  Per request the fleet:
+
+  route      builds one ``WorkerView`` per worker from a consistent
+             ``GatewayStats`` snapshot and asks the ``Router`` (plan-
+             aware by default: deadline-tight → fastest, best-effort →
+             cheapest that fits) to place the request.  The router
+             never sees — and so can never pick — a worker that lacks
+             the plan, is draining, or is unhealthy.
+  health     every outcome feeds the worker's ``WorkerHealth`` machine:
+             ``eject_after`` consecutive failures eject it from
+             routing; after ``probe_interval`` the router may send one
+             canary, and a served canary re-admits the worker.  A
+             failed request is retried on another worker (bounded by
+             ``max_retries``) before the caller sees the error.
+  drain      ``drain(worker_id)`` stops new admissions to the worker,
+             pulls its queued-but-not-dispatched requests back out of
+             the gateway (``extract_queued``) and re-routes them, then
+             waits for its in-flight batches to finish — zero admitted
+             requests lost, the invariant the fleet benchmark and the
+             regression tests pin.
+
+The fleet tracks each client request as a ``FleetRequest`` whose
+deadline stays anchored to *first* admission: re-routes and retries
+spend the same budget, so a detour can never smuggle a request past
+its SLA.  Deadlines are handed to workers as remaining-relative
+seconds, so a fleet and its gateways need not share a clock epoch.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.fleet.router import Router, RouterLike, get_router
+from repro.fleet.worker import FleetWorker
+from repro.serve.async_engine import DeadlineExpired, GatewayBacklog
+
+#: gateway scheduling priority per tier — interactive preempts batch
+#: preempts best-effort inside every worker's EDF admission queue
+TIER_PRIORITY = {"interactive": 2, "batch": 1, "best_effort": 0}
+
+
+class FleetError(RuntimeError):
+    """Base class for fleet routing/admission failures."""
+
+
+class NoWorkerAvailable(FleetError):
+    """No healthy, non-draining worker serves the request's plan."""
+
+
+class FleetSaturated(FleetError, GatewayBacklog):
+    """Every admissible worker's admission queue is at its bound —
+    the fleet-level analogue of ``GatewayBacklog`` (and a subclass of
+    it, so gateway-aware shedding code handles fleets unchanged)."""
+
+
+@dataclass(eq=False)               # identity hash — requests live in sets
+class FleetRequest:
+    """One client request as the fleet tracks it across workers."""
+    image: np.ndarray
+    plan_id: str
+    tier: str
+    priority: int
+    deadline: Optional[float]      # absolute on the *fleet* clock
+    request_id: int
+    future: "asyncio.Future"
+    attempts: int = 0
+    client_cancelled: bool = False
+    worker_fut: Optional["asyncio.Future"] = field(default=None,
+                                                   repr=False)
+
+
+class Fleet:
+    """The front door.  Typical lifecycle::
+
+        fleet = Fleet([FleetWorker("edge0", gw_edge, "edge"),
+                       FleetWorker("v5e0", gw_v5e, "v5e"),
+                       FleetWorker("v5p0", gw_v5p, "v5p")],
+                      router="plan_aware")
+        async with fleet:
+            fut = await fleet.submit(img, tier="interactive",
+                                     deadline=0.25)
+            out = await fut
+            await fleet.drain("v5e0")      # zero requests lost
+    """
+
+    def __init__(self, workers: Sequence[FleetWorker],
+                 router: RouterLike = "plan_aware", *,
+                 max_retries: int = 2,
+                 clock: Callable[[], float] = time.monotonic):
+        if not workers:
+            raise ValueError("a fleet needs at least one worker")
+        ids = [w.worker_id for w in workers]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate worker ids: {sorted(ids)}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries={max_retries} must be ≥ 0")
+        self.workers: Dict[str, FleetWorker] = {
+            w.worker_id: w for w in sorted(workers,
+                                           key=lambda w: w.worker_id)}
+        self.router: Router = get_router(router)
+        self.max_retries = max_retries
+        self.clock = clock
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._tasks: set = set()
+        self._next_id = 0
+        self._closing = False
+        # fleet-level counters (mutated on the loop thread)
+        self.served = 0
+        self.expired = 0
+        self.cancelled = 0
+        self.rerouted = 0
+        self.retried = 0
+        self.worker_failures = 0
+        self.drains = 0
+
+    # -- lifecycle --------------------------------------------------------
+    def _ensure_started(self) -> None:
+        loop = asyncio.get_running_loop()
+        if self._loop is None:
+            self._loop = loop
+        elif self._loop is not loop:
+            raise RuntimeError("fleet is bound to a different event loop")
+
+    async def __aenter__(self) -> "Fleet":
+        self._ensure_started()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    async def close(self) -> None:
+        """Let every worker drain its queue, then shut all of them
+        down.  In-flight re-route tasks are awaited first so nothing
+        is submitted into a closing gateway."""
+        self._closing = True
+        if self._tasks:
+            await asyncio.gather(*self._tasks, return_exceptions=True)
+        for w in self.workers.values():
+            await w.gateway.close()
+
+    # -- admission --------------------------------------------------------
+    def _resolve_plan(self, plan_id: Optional[str]) -> str:
+        if plan_id is not None:
+            return plan_id
+        for w in self.workers.values():
+            for pid in w.gateway.plans:
+                return pid
+        raise FleetError("no plan registered on any worker")
+
+    def _make_request(self, image, plan_id, tier, priority, deadline
+                      ) -> FleetRequest:
+        if tier not in TIER_PRIORITY:
+            raise ValueError(f"unknown tier {tier!r}; known: "
+                             f"{sorted(TIER_PRIORITY)}")
+        now = self.clock()
+        fr = FleetRequest(
+            image=image, plan_id=self._resolve_plan(plan_id), tier=tier,
+            priority=priority, request_id=self._next_id,
+            deadline=None if deadline is None else now + deadline,
+            future=self._loop.create_future())
+        self._next_id += 1
+        fr.future.add_done_callback(
+            lambda f, fr=fr: self._on_client_done(fr, f))
+        return fr
+
+    def _on_client_done(self, fr: FleetRequest, fut) -> None:
+        if fut.cancelled():
+            fr.client_cancelled = True
+            if fr.worker_fut is not None and not fr.worker_fut.done():
+                fr.worker_fut.cancel()
+
+    def submit_nowait(self, image, *, plan_id: Optional[str] = None,
+                      tier: str = "best_effort", priority: int = 0,
+                      deadline: Optional[float] = None
+                      ) -> "asyncio.Future":
+        """Route and admit one image, or raise: ``NoWorkerAvailable``
+        when no admissible worker serves the plan (health/drain),
+        ``FleetSaturated`` when every admissible worker's admission
+        queue is at its bound.  ``deadline`` is relative seconds from
+        now and is spent across any re-routes or retries."""
+        self._ensure_started()
+        if self._closing:
+            raise RuntimeError("fleet is closing")
+        fr = self._make_request(image, plan_id, tier, priority, deadline)
+        excluded: set = set()
+        while True:
+            worker = self._select(fr, self.clock(), excluded)
+            if worker is None:
+                if excluded:
+                    raise FleetSaturated(
+                        f"every admissible worker for plan "
+                        f"{fr.plan_id!r} is at its admission bound "
+                        f"({sorted(excluded)}); retry with backoff or "
+                        f"use `await fleet.submit(...)`")
+                raise NoWorkerAvailable(
+                    f"no healthy, non-draining worker serves plan "
+                    f"{fr.plan_id!r}")
+            try:
+                wfut = worker.gateway.submit_nowait(
+                    fr.image, plan_id=fr.plan_id,
+                    priority=self._gateway_priority(fr),
+                    deadline=self._remaining(fr))
+            except GatewayBacklog:
+                excluded.add(worker.worker_id)
+                continue
+            self._attach(fr, worker, wfut)
+            return fr.future
+
+    async def submit(self, image, *, plan_id: Optional[str] = None,
+                     tier: str = "best_effort", priority: int = 0,
+                     deadline: Optional[float] = None
+                     ) -> "asyncio.Future":
+        """Route and admit one image, **awaiting** admission when the
+        chosen worker's queue is at its bound — backpressure propagates
+        to the producer, exactly like ``AsyncCNNGateway.submit``."""
+        self._ensure_started()
+        if self._closing:
+            raise RuntimeError("fleet is closing")
+        fr = self._make_request(image, plan_id, tier, priority, deadline)
+        await self._route_and_admit(fr)
+        if fr.worker_fut is None:
+            await fr.future            # routing failed: raises the error
+        return fr.future
+
+    async def infer(self, image, **kw) -> np.ndarray:
+        """Submit and await the result in one call."""
+        fut = await self.submit(image, **kw)
+        return await fut
+
+    # -- routing core -----------------------------------------------------
+    def _gateway_priority(self, fr: FleetRequest) -> int:
+        return TIER_PRIORITY[fr.tier] * 16 + fr.priority
+
+    def _remaining(self, fr: FleetRequest) -> Optional[float]:
+        """Deadline budget left, as the relative seconds the worker
+        gateway expects (anchored to first fleet admission)."""
+        if fr.deadline is None:
+            return None
+        return fr.deadline - self.clock()
+
+    def _views(self, now: float, excluded=frozenset()):
+        return [w.view(now) for wid, w in self.workers.items()
+                if wid not in excluded]
+
+    def _select(self, fr: FleetRequest, now: float,
+                excluded=frozenset()) -> Optional[FleetWorker]:
+        view = self.router.select(fr.plan_id, fr.tier,
+                                  self._views(now, excluded), now,
+                                  deadline=fr.deadline)
+        if view is None:
+            return None
+        worker = self.workers[view.worker_id]
+        if worker.health.ejected:
+            worker.health.begin_probe()   # this request is the canary
+        return worker
+
+    def _attach(self, fr: FleetRequest, worker: FleetWorker,
+                wfut: "asyncio.Future") -> None:
+        fr.attempts += 1
+        fr.worker_fut = wfut
+        worker.outstanding.add(fr)
+        wfut.add_done_callback(
+            lambda f, fr=fr, w=worker: self._on_worker_done(fr, w, f))
+
+    def _spawn(self, coro) -> None:
+        task = self._loop.create_task(coro)
+        self._tasks.add(task)
+        task.add_done_callback(self._tasks.discard)
+
+    async def _route_and_admit(self, fr: FleetRequest,
+                               excluded=frozenset()) -> None:
+        """Route ``fr`` and admit it with backpressure; terminal
+        routing failures resolve the client future instead of raising
+        (callers on the re-route path are fire-and-forget tasks)."""
+        if fr.future.done():
+            return
+        now = self.clock()
+        if fr.deadline is not None and now > fr.deadline:
+            self.expired += 1
+            fr.future.set_exception(DeadlineExpired(
+                f"fleet request {fr.request_id} deadline passed "
+                f"before (re-)admission"))
+            return
+        worker = self._select(fr, now, excluded)
+        if worker is None:
+            fr.future.set_exception(NoWorkerAvailable(
+                f"no healthy, non-draining worker serves plan "
+                f"{fr.plan_id!r}"))
+            return
+        try:
+            wfut = await worker.gateway.submit(
+                fr.image, plan_id=fr.plan_id,
+                priority=self._gateway_priority(fr),
+                deadline=self._remaining(fr))
+        except Exception as e:          # noqa: BLE001 — gateway closing
+            if not fr.future.done():    # or admission-time validation
+                fr.future.set_exception(e)
+            return
+        self._attach(fr, worker, wfut)
+
+    # -- outcome handling -------------------------------------------------
+    def _on_worker_done(self, fr: FleetRequest, worker: FleetWorker,
+                        wfut) -> None:
+        worker.outstanding.discard(fr)
+        if not worker.outstanding:
+            for ev in worker._idle_waiters:
+                ev.set()
+        if wfut.cancelled():
+            if fr.client_cancelled:
+                self.cancelled += 1
+                if not fr.future.done():
+                    fr.future.cancel()
+                return
+            # drain eviction: the worker gave the request back — route
+            # it to another worker on the same deadline budget
+            self.rerouted += 1
+            self._spawn(self._route_and_admit(fr))
+            return
+        exc = wfut.exception()
+        if exc is None:
+            worker.health.note_success()
+            self.served += 1
+            if not fr.future.done():
+                fr.future.set_result(wfut.result())
+        elif isinstance(exc, DeadlineExpired):
+            # the worker functioned; the request was simply late — no
+            # health strike, but clear any outstanding probe
+            worker.health.note_neutral()
+            self.expired += 1
+            if not fr.future.done():
+                fr.future.set_exception(exc)
+        else:
+            self.worker_failures += 1
+            worker.health.note_failure(self.clock())
+            if fr.attempts <= self.max_retries and not fr.future.done():
+                self.retried += 1
+                self._spawn(self._route_and_admit(
+                    fr, excluded=frozenset({worker.worker_id})))
+            elif not fr.future.done():
+                fr.future.set_exception(exc)
+
+    # -- draining ---------------------------------------------------------
+    async def drain(self, worker_id: str) -> FleetWorker:
+        """Gracefully take ``worker_id`` out of service: stop new
+        admissions (the router no longer sees it), re-route its queued
+        requests to the rest of the fleet, and wait until its in-flight
+        batches finish.  Zero admitted requests are lost: every evicted
+        request re-enters routing with its original deadline budget.
+        The worker stays registered (and drained) — flip ``.draining``
+        back to False to re-admit it."""
+        self._ensure_started()
+        try:
+            worker = self.workers[worker_id]
+        except KeyError:
+            raise FleetError(
+                f"unknown worker {worker_id!r}; fleet has: "
+                f"{sorted(self.workers)}") from None
+        if not worker.draining:
+            worker.draining = True
+            self.drains += 1
+            worker.gateway.extract_queued()   # futures cancel → re-route
+        if worker.outstanding:
+            ev = asyncio.Event()
+            worker._idle_waiters.append(ev)
+            try:
+                await ev.wait()
+            finally:
+                worker._idle_waiters.remove(ev)
+        return worker
+
+    # -- observability ----------------------------------------------------
+    def stats(self) -> dict:
+        """Fleet counters plus one consistent per-worker snapshot
+        (`GatewayStats` + health/drain state)."""
+        now = self.clock()
+        per_worker = {}
+        for wid, w in self.workers.items():
+            try:
+                snap = w.gateway.snapshot().asdict()
+            except Exception:       # noqa: BLE001 — missed heartbeat
+                snap = None
+            per_worker[wid] = {
+                "profile": w.profile.name,
+                "cost": w.profile.cost,
+                "plans": sorted(w.plan_ids),
+                "rate": w.rate,
+                "healthy": w.health.healthy,
+                "routable": w.health.routable(now),
+                "ejections": w.health.ejections,
+                "probes": w.health.probes,
+                "draining": w.draining,
+                "outstanding": len(w.outstanding),
+                "snapshot": snap,
+            }
+        return {
+            "router": self.router.name,
+            "served": self.served,
+            "expired": self.expired,
+            "cancelled": self.cancelled,
+            "rerouted": self.rerouted,
+            "retried": self.retried,
+            "worker_failures": self.worker_failures,
+            "drains": self.drains,
+            "workers": per_worker,
+        }

@@ -27,6 +27,14 @@ aware batch formation, a new bucket dispatch the moment slots free:
   PYTHONPATH=src python -m repro.launch.serve --workload cnn --async \
       --requests 128 --max-batch 8 --occupancy 2.0 \
       [--deadline-ms 250] [--max-pending 32]
+
+Fleet workload — the multi-worker front door from ``repro.fleet``: one
+gateway per device profile (edge / v5e / v5p, each serving the plan the
+deployment planner picked for that profile), tiered Poisson traffic
+placed by a pluggable router, optional mid-trace graceful drain:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload cnn --fleet \
+      --requests 96 --occupancy 1.5 [--router plan_aware] [--drain]
 """
 
 from __future__ import annotations
@@ -201,6 +209,109 @@ def run_cnn_async(args) -> None:
           f"{stats['max_pending']}")
 
 
+def run_cnn_fleet(args) -> None:
+    """Plan-aware fleet front door: one gateway per device profile
+    (each serving the plan the deployment planner picked for *that*
+    profile under one shared plan id), tiered Poisson traffic routed
+    by ``--router``, per-tier tail latency reported.  ``--drain``
+    gracefully drains the v5e worker halfway through — queued requests
+    re-route, in-flight batches finish, nothing is lost."""
+    from repro.core import allocate, deploy
+    from repro.core.cnn import fitted_block_models, quickstart_cnn_config
+    from repro.fleet import DEFAULT_TIERS, Fleet, FleetWorker
+    from repro.serve import AsyncCNNGateway, AsyncServeConfig
+
+    cfg = quickstart_cnn_config()
+    bm = fitted_block_models()
+    profiles = ("edge", "v5e", "v5p")
+    t0 = time.time()
+    workers = []
+    for name in profiles:
+        plan = deploy.plan_deployment(cfg, bm, allocate.get_device(name),
+                                      target=0.8, on_infeasible="fallback")
+        gw = AsyncCNNGateway.from_plan(
+            plan, AsyncServeConfig(max_batch=args.max_batch,
+                                   max_pending=args.max_pending),
+            plan_id="cnn")
+        workers.append(FleetWorker(f"{name}0", gw, name))
+    print(f"[fleet] {len(workers)} workers "
+          f"({', '.join(f'{w.worker_id}:{w.profile.name}' for w in workers)})"
+          f" AOT-warmed in {time.time() - t0:.2f}s")
+
+    compiled = workers[1].gateway.plans["cnn"].compiled
+    imgs = compiled.sample_images(args.requests)
+    xb = np.stack([np.asarray(i, compiled.in_dtype)
+                   for i in imgs[:args.max_batch]])
+    compiled(xb)                                   # touch
+    t0 = time.perf_counter()
+    jax.block_until_ready(compiled(xb))
+    step_s = time.perf_counter() - t0
+    rate = args.occupancy * args.max_batch / step_s
+    print(f"[fleet] offered load {rate:.0f} images/s "
+          f"(occupancy {args.occupancy:g} of one worker), "
+          f"router {args.router!r}")
+
+    rng = np.random.default_rng(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, args.requests))
+    tiers = list(DEFAULT_TIERS)
+    shares = [t.share for t in DEFAULT_TIERS.values()]
+    tier_of = rng.choice(len(tiers), size=args.requests, p=shares)
+
+    async def drive():
+        per_tier = {t: [] for t in tiers}
+        expired = 0
+        fleet = Fleet(workers, router=args.router)
+        async with fleet:
+            t_start = time.monotonic()
+
+            async def one(i):
+                nonlocal expired
+                await asyncio.sleep(max(0.0, arrivals[i]
+                                        - (time.monotonic() - t_start)))
+                tier = tiers[tier_of[i]]
+                spec = DEFAULT_TIERS[tier]
+                t_sub = time.monotonic()
+                try:
+                    fut = await fleet.submit(imgs[i], tier=tier,
+                                             deadline=spec.deadline_s)
+                    await fut
+                    per_tier[tier].append(time.monotonic() - t_sub)
+                except Exception:       # noqa: BLE001 — expired/shed
+                    expired += 1
+
+            async def drainer():
+                await asyncio.sleep(arrivals[args.requests // 2])
+                print("[fleet] draining v5e0 ...")
+                await fleet.drain("v5e0")
+                print("[fleet] v5e0 drained (in-flight finished, "
+                      "queue re-routed)")
+
+            tasks = [one(i) for i in range(args.requests)]
+            if args.drain:
+                tasks.append(drainer())
+            await asyncio.gather(*tasks)
+            stats = fleet.stats()
+        return per_tier, expired, stats, time.monotonic() - t_start
+
+    per_tier, expired, stats, wall = asyncio.run(drive())
+    total = sum(len(v) for v in per_tier.values())
+    print(f"[fleet] {total} served / {expired} expired-or-shed of "
+          f"{args.requests} in {wall:.2f}s  (rerouted={stats['rerouted']}"
+          f", retried={stats['retried']}, drains={stats['drains']})")
+    for tier, lats in per_tier.items():
+        if not lats:
+            continue
+        pct = _percentiles(lats)
+        print(f"[fleet]   {tier:<12} n={len(lats):<5} "
+              f"p50={pct['p50_ms']:.1f}ms p95={pct['p95_ms']:.1f}ms "
+              f"p99={pct['p99_ms']:.1f}ms")
+    for wid, w in stats["workers"].items():
+        snap = w["snapshot"] or {}
+        print(f"[fleet]   {wid:<8} profile={w['profile']:<5} "
+              f"served={snap.get('served', 0):<5} "
+              f"draining={w['draining']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=("lm", "cnn"), default="lm")
@@ -229,9 +340,25 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline; late requests are "
                          "expired, never served late (cnn --async)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve tiered traffic through a heterogeneous "
+                         "edge/v5e/v5p fleet front door (cnn)")
+    ap.add_argument("--router", default="plan_aware",
+                    help="fleet routing policy: plan_aware, "
+                         "least_loaded, or round_robin (cnn --fleet)")
+    ap.add_argument("--drain", action="store_true",
+                    help="gracefully drain the v5e worker halfway "
+                         "through the trace (cnn --fleet)")
+    ap.add_argument("--seed", type=int, default=1,
+                    help="rng seed for generated traffic (cnn --fleet)")
     args = ap.parse_args()
     if args.workload == "cnn":
-        run_cnn_async(args) if args.async_ else run_cnn(args)
+        if args.fleet:
+            run_cnn_fleet(args)
+        elif args.async_:
+            run_cnn_async(args)
+        else:
+            run_cnn(args)
     else:
         run_lm(args)
 

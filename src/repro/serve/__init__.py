@@ -1,4 +1,4 @@
-from repro.serve.slots import SlotPool
+from repro.serve.slots import GatewayStats, SlotPool
 from repro.serve.policy import (DeadlinePolicy, FifoPolicy,
                                 SchedulingPolicy, get_policy,
                                 list_policies)
@@ -10,7 +10,7 @@ from repro.serve.async_engine import (AdmissionQueue, AsyncCNNGateway,
                                       DeadlineExpired, GatewayBacklog,
                                       RequestCancelled)
 
-__all__ = ["ServeConfig", "Engine", "Request", "SlotPool",
+__all__ = ["ServeConfig", "Engine", "Request", "SlotPool", "GatewayStats",
            "CNNEngine", "CNNServeConfig", "ImageRequest", "validate_image",
            "SchedulingPolicy", "FifoPolicy", "DeadlinePolicy",
            "get_policy", "list_policies",

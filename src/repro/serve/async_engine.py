@@ -60,7 +60,7 @@ from repro.runtime.compiled import (CompiledCNN, DispatchAborted,
 from repro.serve import policy as policy_mod
 from repro.serve.cnn_engine import validate_image
 from repro.serve.policy import PolicyLike, get_policy
-from repro.serve.slots import SlotPool
+from repro.serve.slots import GatewayStats, SlotPool
 
 
 class GatewayBacklog(RuntimeError):
@@ -209,6 +209,19 @@ class AdmissionQueue:
             heapq.heappush(self._heap, entry)
         return plan_id, batch
 
+    def evict_pending(self) -> List[AsyncRequest]:
+        """Remove every still-pending entry from the heap *without*
+        finishing it or touching the live count.  The caller owns the
+        evicted requests: it must drive each to a terminal state, whose
+        hook releases the admission slot via ``note_terminal`` — the
+        seam ``AsyncCNNGateway.extract_queued`` (fleet draining) uses.
+        Terminal entries still parked in the heap are dropped for free
+        (their lazy deletion completes here)."""
+        evicted = [req for _, _, req in self._heap
+                   if req.status == "pending"]
+        self._heap.clear()
+        return evicted
+
 
 @dataclass
 class AsyncServeConfig:
@@ -269,6 +282,7 @@ class AsyncCNNGateway(SlotPool):
         self.served = 0
         self.rejected = 0
         self.cancelled = 0
+        self.failed = 0
         self.aborted_dispatches = 0
 
     # -- plan registry ----------------------------------------------------
@@ -509,6 +523,7 @@ class AsyncCNNGateway(SlotPool):
                     # their futures in a forever-pending state
                     for r in alive:
                         r._finish("failed", error=e)
+                        self.failed += 1
                     out = None
                 if out is not None:
                     for k, r in enumerate(alive):
@@ -522,6 +537,22 @@ class AsyncCNNGateway(SlotPool):
             for s in slots:
                 self.release(s)       # hooks re-wake the drain task
             self._signal_space()
+
+    # -- fleet draining seam ----------------------------------------------
+    def extract_queued(self) -> List[AsyncRequest]:
+        """Pull every queued-but-not-in-flight request out of the
+        admission queue so a fleet front door can re-route it to
+        another worker (graceful drain).  Each extracted request is
+        cancelled — its future resolves as cancelled and its admission
+        slot frees via the normal terminal hook — and the returned
+        ``AsyncRequest``s carry everything (image, plan id, priority,
+        absolute deadline) a re-route needs.  In-flight batches are
+        untouched: they finish through the usual dispatch path."""
+        evicted = self.queue.evict_pending()
+        for req in evicted:
+            req.cancel()            # terminal hook releases the bound
+        self._signal_space()
+        return evicted
 
     # -- sugar ------------------------------------------------------------
     async def infer(self, image, **kw) -> np.ndarray:
@@ -543,23 +574,39 @@ class AsyncCNNGateway(SlotPool):
                         "there is no manual step()")
 
     # -- observability ----------------------------------------------------
+    def snapshot(self) -> GatewayStats:
+        """One consistent ``GatewayStats`` capture on the gateway's own
+        clock: queue depth, in-flight slots, occupancy histogram, and
+        every terminal counter in a single pass — the heartbeat the
+        fleet health checks and routers read (never racing dict
+        reads)."""
+        return super().snapshot(
+            clock=self.clock, queue_depth=len(self.queue),
+            served=self.served, rejected=self.rejected,
+            expired=self.queue.expired, cancelled=self.cancelled,
+            failed=self.failed)
+
     def stats(self) -> dict:
         """Gateway counters + the SlotPool occupancy histogram + the
         shared-cache compile telemetry (one entry per distinct
-        (layer, bucket) across *all* registered plans)."""
+        (layer, bucket) across *all* registered plans).  Built from one
+        ``snapshot()`` so every field is from the same instant."""
+        snap = self.snapshot()
         return {
             "plans": {pid: e.served for pid, e in self.plans.items()},
-            "served": self.served,
-            "rejected": self.rejected,
-            "expired": self.queue.expired,
-            "cancelled": self.cancelled,
+            "served": snap.served,
+            "rejected": snap.rejected,
+            "expired": snap.expired,
+            "cancelled": snap.cancelled,
+            "failed": snap.failed,
             "aborted_dispatches": self.aborted_dispatches,
-            "pending": len(self.queue),
+            "pending": snap.queue_depth,
+            "inflight": snap.inflight,
             "max_pending": self.queue.max_pending,
-            "max_batch": self.max_batch,
+            "max_batch": snap.max_batch,
             "max_inflight": self.cfg.max_inflight,
             "policy": self.queue.policy.name,
-            "steps": self.steps,
-            "occupancy_hist": dict(self.occupancy_hist),
+            "steps": snap.steps,
+            "occupancy_hist": dict(snap.occupancy_hist),
             "exec_cache": self.exec_cache.stats(),
         }

@@ -160,13 +160,17 @@ class CNNEngine(SlotPool):
         """Aggregate serving counters plus occupancy/bucket telemetry:
         ``occupancy_hist`` is the live-slot histogram per step and
         ``bucket_hits`` counts dispatches per AOT batch bucket — together
-        they make the bucketed-batching win observable."""
+        they make the bucketed-batching win observable.  Histogram and
+        step count come from one ``SlotPool.snapshot()`` capture (the
+        same consistent-snapshot seam the async gateway and the fleet
+        health checks use)."""
+        snap = self.snapshot(served=self.images_served)
         return {
-            "images_served": self.images_served,
-            "steps": self.steps,
-            "images_per_step": self.images_served / max(self.steps, 1),
-            "max_batch": self.max_batch,
-            "occupancy_hist": dict(self.occupancy_hist),
+            "images_served": snap.served,
+            "steps": snap.steps,
+            "images_per_step": snap.served / max(snap.steps, 1),
+            "max_batch": snap.max_batch,
+            "occupancy_hist": dict(snap.occupancy_hist),
             "bucket_hits": dict(self.compiled.bucket_hits),
             "aot_warmed_up": self.compiled.warmed_up,
         }

@@ -35,12 +35,50 @@ frees — the async gateway's waiters block on exactly that signal.
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import threading
 import time
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.serve.policy import PolicyLike, get_policy
+
+
+@dataclass(frozen=True)
+class GatewayStats:
+    """One *consistent* point-in-time view of a serving engine — the
+    snapshot the fleet health checks and routers read.
+
+    Every field is captured in a single pass under the pool's stats
+    lock (plus the owner's counters, which are only ever mutated on one
+    thread), so a reader never sees e.g. a ``served`` count from after
+    a step paired with an ``occupancy_hist`` from before it — the
+    racing-dict-reads failure mode ``stats()`` dictionaries had.
+
+    ``timestamp`` is the owner's monotonic clock at capture: a fleet
+    treats snapshots as heartbeats and compares them by age.
+    """
+    timestamp: float               # monotonic clock at capture
+    queue_depth: int               # admitted but not yet dispatched
+    inflight: int                  # occupied slots (on-device or staged)
+    max_batch: int
+    steps: int
+    occupancy_hist: Dict[int, int] = field(default_factory=dict)
+    # terminal counts (zero for engines that don't track a class)
+    served: int = 0
+    rejected: int = 0
+    expired: int = 0
+    cancelled: int = 0
+    failed: int = 0
+
+    @property
+    def depth(self) -> int:
+        """Total outstanding work: queued + in-flight."""
+        return self.queue_depth + self.inflight
+
+    def asdict(self) -> Dict:
+        return dataclasses.asdict(self)
 
 
 class SlotPool:
@@ -113,6 +151,29 @@ class SlotPool:
         with self._stats_lock:
             counts = list(self._occupancy)
         return {k + 1: c for k, c in enumerate(counts) if c}
+
+    def snapshot(self, *, clock: Callable[[], float] = time.monotonic,
+                 queue_depth: int = 0, **counters) -> GatewayStats:
+        """One consistent ``GatewayStats`` capture: histogram, step
+        count, and slot occupancy are read in a single critical section
+        under ``_stats_lock``.  Subclasses layer their own terminal
+        counters on via ``**counters`` (``served=``, ``expired=``, …)
+        and their queue depth via ``queue_depth`` — those are owned by
+        a single mutating thread, so reading them alongside the locked
+        fields yields the one-pass snapshot fleet health checks need."""
+        with self._stats_lock:
+            hist = {k + 1: c for k, c in enumerate(self._occupancy) if c}
+            steps = self.steps
+            inflight = sum(1 for r in self.active if r is not None)
+        return GatewayStats(
+            timestamp=clock(), queue_depth=queue_depth, inflight=inflight,
+            max_batch=self.max_batch, steps=steps, occupancy_hist=hist,
+            **counters)
+
+    def stats(self) -> Dict:
+        """Base telemetry dict — one consistent ``snapshot()`` flattened
+        to the mapping shape the engines' ``stats()`` extend."""
+        return self.snapshot().asdict()
 
     # -- engine interface ------------------------------------------------
     def submit(self, req) -> bool:

@@ -419,3 +419,64 @@ def test_compiled_cnn_dispatch_abort():
     y = cnn(x, should_abort=lambda: False)
     ref = cnn_forward_ref(params, jnp.asarray(x), cfg)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# the GatewayStats snapshot seam (shared by SlotPool and the gateway)
+# ---------------------------------------------------------------------------
+
+def test_slot_pool_and_gateway_share_the_snapshot_seam():
+    """`GatewayStats` is the one stats capture both serving layers (and
+    the fleet's health heartbeats) read: the raw SlotPool emits it, the
+    gateway's override layers its terminal counters on, and stats() is
+    derived from one snapshot rather than assembled field-by-field."""
+    from repro.serve import GatewayStats
+    from repro.serve.slots import SlotPool
+
+    pool = SlotPool(max_batch=3)
+    snap = pool.snapshot(clock=lambda: 12.5)
+    assert isinstance(snap, GatewayStats)
+    assert snap.timestamp == 12.5
+    assert snap.queue_depth == 0 and snap.inflight == 0
+    assert snap.depth == 0 and snap.max_batch == 3
+    assert pool.stats()["occupancy_hist"] == {}
+
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=8))
+    gsnap = gw.snapshot()
+    assert isinstance(gsnap, GatewayStats)
+    assert gsnap.max_batch == 2 and gsnap.depth == 0
+    d = gsnap.asdict()
+    for key in ("timestamp", "queue_depth", "inflight", "max_batch",
+                "steps", "occupancy_hist", "served", "rejected",
+                "expired", "cancelled", "failed"):
+        assert key in d, key
+    # the flattened stats() carries the same terminal counters
+    stats = gw.stats()
+    assert stats["served"] == 0 and stats["failed"] == 0
+    assert stats["inflight"] == 0
+
+
+def test_gateway_snapshot_tracks_queue_and_terminals():
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=8))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 5, seed=11)
+
+    async def main():
+        async with gw:
+            futs = [gw.submit_nowait(img) for img in imgs]
+            # before yielding to dispatch, all five sit in the queue
+            pre = gw.snapshot()
+            assert pre.queue_depth == 5 and pre.depth == 5
+            outs = await asyncio.gather(*futs)
+            return pre, outs
+
+    pre, outs = asyncio.run(main())
+    post = gw.snapshot()
+    assert post.queue_depth == 0 and post.inflight == 0
+    assert post.served == len(outs) == 5
+    assert post.steps >= 3            # max_batch=2 → ≥ ceil(5/2) steps
+    assert sum(k * v for k, v in post.occupancy_hist.items()) == 5

@@ -1,0 +1,399 @@
+"""Fleet front door: routing policies (unit + property), the worker
+health state machine, the ``device_profile`` catalog lookup, and the
+live asyncio ``Fleet`` end-to-end — bit-exact multi-worker serving,
+saturation/no-worker errors, failure retry with ejection + probe
+re-admission, and graceful draining that loses nothing."""
+
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import deploy
+from repro.core.cnn import (CNNConfig, ConvLayerSpec, cnn_forward_ref,
+                            fitted_block_models)
+from repro.core.deploy import DeploymentError, device_profile
+from repro.fleet import (TIERS, Fleet, FleetError, FleetSaturated,
+                         FleetWorker, HealthPolicy, NoWorkerAvailable,
+                         WorkerHealth, WorkerView, get_router, list_routers)
+from repro.runtime import CompiledCNN
+from repro.serve import AsyncCNNGateway, AsyncServeConfig
+
+
+def _cfg():
+    return CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
+        ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
+    ), img_h=16, img_w=64)
+
+
+@pytest.fixture(scope="module")
+def compiled_plan():
+    """One plan + warmed CompiledCNN shared by every live-fleet test
+    (registering a pre-compiled plan into a gateway is free)."""
+    plan = deploy.plan_deployment(_cfg(), fitted_block_models(),
+                                  target=0.8, on_infeasible="fallback")
+    return plan, CompiledCNN.from_plan(plan, max_batch=4)
+
+
+def _gateway(compiled_plan, *, max_pending=16):
+    plan, compiled = compiled_plan
+    gw = AsyncCNNGateway(AsyncServeConfig(max_batch=4,
+                                          max_pending=max_pending))
+    gw.register_plan(plan, plan_id="cnn", compiled=compiled)
+    return gw
+
+
+def _ref_outputs(compiled_plan, imgs):
+    plan, compiled = compiled_plan
+    pcfg = deploy.plan_config(plan)
+    return [np.asarray(cnn_forward_ref(compiled.params, jnp.asarray(i),
+                                       pcfg)) for i in imgs]
+
+
+# ---------------------------------------------------------------------------
+# routers on synthetic views (no event loop, no gateways)
+# ---------------------------------------------------------------------------
+
+def _view(wid, *, cost=1.0, plans=("cnn",), depth=0, inflight=0,
+          rate=10.0, healthy=True, draining=False):
+    return WorkerView(wid, cost=cost, plan_ids=plans, rate=rate,
+                      queue_depth=depth, inflight=inflight,
+                      healthy=healthy, draining=draining)
+
+
+def test_round_robin_rotates_over_admissible_only():
+    r = get_router("round_robin")
+    views = [_view("a"), _view("b", draining=True), _view("c"),
+             _view("d", plans=("other",))]
+    picks = [r.select("cnn", "batch", views, 0.0).worker_id
+             for _ in range(4)]
+    assert picks == ["a", "c", "a", "c"]
+
+
+def test_least_loaded_minimizes_wait_then_cost():
+    r = get_router("least_loaded")
+    views = [_view("slow", depth=8, rate=10.0),
+             _view("fast", depth=8, rate=100.0),
+             _view("idle-pricey", cost=3.0),
+             _view("idle-cheap", cost=0.2)]
+    assert r.select("cnn", "batch", views, 0.0).worker_id == "idle-cheap"
+
+
+def test_plan_aware_tiering():
+    r = get_router("plan_aware")
+    edge = _view("edge", cost=0.2, depth=2, rate=10.0)    # wait 0.2s
+    v5p = _view("v5p", cost=3.4, depth=2, rate=200.0)     # wait 0.01s
+    views = [edge, v5p]
+    # interactive → fastest door, cost be damned
+    assert r.select("cnn", "interactive", views, 0.0).worker_id == "v5p"
+    # tight deadline does the same regardless of tier
+    assert r.select("cnn", "batch", views, 0.0,
+                    deadline=0.1).worker_id == "v5p"
+    # best-effort → cheapest inside the wait budget
+    assert r.select("cnn", "best_effort", views, 0.0).worker_id == "edge"
+    # cheap tier saturated → spills up to the next cost tier
+    edge.queue_depth = 100                                # wait 10s
+    assert r.select("cnn", "best_effort", views, 0.0).worker_id == "v5p"
+    # everyone past budget → least-loaded degradation, not a refusal
+    v5p.queue_depth = 10_000
+    assert r.select("cnn", "best_effort", views, 0.0).worker_id == "edge"
+
+
+def test_get_router_fresh_instances_and_unknown_name():
+    a, b = get_router("round_robin"), get_router("round_robin")
+    assert a is not b                   # rotation state is never shared
+    assert get_router(a) is a           # instances pass through
+    assert get_router(None).name == "plan_aware"
+    with pytest.raises(ValueError, match="unknown router"):
+        get_router("coin_flip")
+    assert list_routers() == ("least_loaded", "plan_aware", "round_robin")
+
+
+if HAVE_HYPOTHESIS:
+    _worker_specs = st.lists(
+        st.tuples(
+            st.floats(0.1, 5.0),        # cost
+            st.booleans(),              # serves the plan
+            st.integers(0, 50),         # queue depth
+            st.floats(1.0, 500.0),      # rate
+            st.booleans(),              # healthy
+            st.booleans(),              # draining
+        ), min_size=0, max_size=8)
+else:                                        # pragma: no cover
+    _worker_specs = None
+
+
+@settings(max_examples=150, deadline=None)
+@given(specs=_worker_specs, tier=st.sampled_from(TIERS),
+       router_name=st.sampled_from(list_routers()),
+       headroom=st.one_of(st.none(), st.floats(0.01, 10.0)),
+       now=st.floats(0.0, 100.0))
+def test_routers_never_pick_inadmissible_workers(specs, tier,
+                                                 router_name, headroom,
+                                                 now):
+    """Property: for every registered router, under any fleet state,
+    ``select`` never returns a worker that is draining, unhealthy, or
+    lacks the plan — and never returns None while an admissible worker
+    exists (routers place, they don't refuse)."""
+    views = [_view(f"w{i}", cost=c, plans=("cnn",) if has else ("x",),
+                   depth=d, rate=rate, healthy=h, draining=dr)
+             for i, (c, has, d, rate, h, dr) in enumerate(specs)]
+    router = get_router(router_name)
+    deadline = None if headroom is None else now + headroom
+    chosen = router.select("cnn", tier, views, now, deadline=deadline)
+    admissible = [v for v in views if v.accepting and "cnn" in v.plan_ids]
+    if admissible:
+        assert chosen in admissible
+    else:
+        assert chosen is None
+
+
+# ---------------------------------------------------------------------------
+# the health state machine (fake clock)
+# ---------------------------------------------------------------------------
+
+def test_health_ejects_probes_and_readmits():
+    h = WorkerHealth(HealthPolicy(eject_after=3, probe_interval=1.0))
+    h.note_failure(0.0)
+    h.note_success()                    # streak resets before the bar
+    h.note_failure(1.0), h.note_failure(2.0)
+    assert h.healthy
+    h.note_failure(3.0)                 # third consecutive: ejected
+    assert not h.healthy and h.ejections == 1
+    assert not h.routable(3.5)          # still in exile
+    assert h.routable(4.0)              # probe due
+    h.begin_probe()
+    assert not h.routable(5.0)          # one canary at a time
+    h.note_failure(5.0)                 # failed probe re-arms the clock
+    assert not h.routable(5.5) and h.routable(6.0)
+    h.begin_probe()
+    h.note_success()                    # served canary re-admits
+    assert h.healthy and h.routable(6.1) and h.probes == 2
+
+
+def test_health_neutral_outcome_releases_probe_only():
+    h = WorkerHealth(HealthPolicy(eject_after=1, probe_interval=1.0))
+    h.note_failure(0.0)
+    assert not h.healthy
+    h.begin_probe()
+    h.note_neutral()                    # deadline expiry: no verdict
+    assert not h.healthy and not h.probing
+    assert h.routable(1.0)              # next canary may go out
+
+
+def test_health_policy_validation():
+    with pytest.raises(ValueError):
+        HealthPolicy(eject_after=0)
+    with pytest.raises(ValueError):
+        HealthPolicy(probe_interval=0.0)
+
+
+# ---------------------------------------------------------------------------
+# the device_profile catalog lookup (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+def test_device_profile_lookup():
+    assert device_profile("v5e").name == "v5e"
+    assert device_profile("edge").cost < device_profile("v5p").cost
+
+
+def test_device_profile_unknown_name_names_the_catalog():
+    with pytest.raises(DeploymentError) as ei:
+        device_profile("v5x")
+    msg = str(ei.value)
+    assert "v5x" in msg
+    for name in ("edge", "v5e", "v5p"):
+        assert name in msg
+
+
+def test_fleet_worker_resolves_profile_and_rejects_typos():
+    gw = object()                       # profile resolution is eager
+    w = FleetWorker("w0", gw, "edge")
+    assert w.profile.name == "edge" and w.rate > 0
+    with pytest.raises(DeploymentError):
+        FleetWorker("w1", gw, "edgy")
+
+
+# ---------------------------------------------------------------------------
+# the live asyncio fleet end-to-end
+# ---------------------------------------------------------------------------
+
+def test_fleet_serves_bit_exact_across_workers(compiled_plan):
+    """Requests spread over heterogeneous workers all come back
+    bit-exact — routing must never change results."""
+    _, compiled = compiled_plan
+    workers = [FleetWorker("edge0", _gateway(compiled_plan), "edge"),
+               FleetWorker("v5e0", _gateway(compiled_plan), "v5e"),
+               FleetWorker("v5p0", _gateway(compiled_plan), "v5p")]
+    imgs = compiled.sample_images(9)
+
+    async def main():
+        fleet = Fleet(workers, router="round_robin")
+        async with fleet:
+            futs = [await fleet.submit(img, tier=TIERS[i % 3])
+                    for i, img in enumerate(imgs)]
+            outs = await asyncio.gather(*futs)
+            return outs, fleet.stats()
+
+    outs, stats = asyncio.run(main())
+    for out, ref in zip(outs, _ref_outputs(compiled_plan, imgs)):
+        np.testing.assert_array_equal(out, ref)
+    assert stats["served"] == 9
+    # round robin spread the work over every worker
+    per_worker = [w["snapshot"]["served"]
+                  for w in stats["workers"].values()]
+    assert sorted(per_worker) == [3, 3, 3]
+
+
+def test_fleet_validation():
+    gw = object()
+    with pytest.raises(ValueError, match="at least one"):
+        Fleet([])
+    with pytest.raises(ValueError, match="duplicate"):
+        Fleet([FleetWorker("a", gw), FleetWorker("a", gw)])
+    with pytest.raises(ValueError, match="max_retries"):
+        Fleet([FleetWorker("a", gw)], max_retries=-1)
+
+    async def bad_tier():
+        fleet = Fleet([FleetWorker("a", gw)])
+        await fleet.__aenter__()           # bind, but don't close object()
+        with pytest.raises(ValueError, match="unknown tier"):
+            fleet.submit_nowait(np.zeros(1), tier="platinum")
+
+    asyncio.run(bad_tier())
+
+
+def test_fleet_no_worker_and_saturation_errors(compiled_plan):
+    _, compiled = compiled_plan
+    imgs = compiled.sample_images(4)
+
+    async def main():
+        workers = [FleetWorker("a", _gateway(compiled_plan,
+                                             max_pending=1), "v5e"),
+                   FleetWorker("b", _gateway(compiled_plan,
+                                             max_pending=1), "v5e")]
+        fleet = Fleet(workers, router="least_loaded")
+        async with fleet:
+            # fill both admission bounds without yielding to dispatch
+            f0 = fleet.submit_nowait(imgs[0])
+            f1 = fleet.submit_nowait(imgs[1])
+            with pytest.raises(FleetSaturated):
+                fleet.submit_nowait(imgs[2])
+            await asyncio.gather(f0, f1)
+            # drain both workers: nothing admissible remains
+            await fleet.drain("a")
+            await fleet.drain("b")
+            with pytest.raises(NoWorkerAvailable):
+                fleet.submit_nowait(imgs[3])
+            with pytest.raises(FleetError, match="unknown worker"):
+                await fleet.drain("zz")
+            return fleet.stats()
+
+    stats = asyncio.run(main())
+    assert stats["served"] == 2 and stats["drains"] == 2
+
+
+def test_fleet_drain_loses_nothing(compiled_plan):
+    """The drain invariant, live: a worker drained with a full queue
+    hands every queued request back, the fleet re-routes them, and all
+    of them complete bit-exactly."""
+    _, compiled = compiled_plan
+    imgs = compiled.sample_images(12)
+
+    async def main():
+        workers = [FleetWorker("a", _gateway(compiled_plan), "v5e"),
+                   FleetWorker("b", _gateway(compiled_plan), "v5e")]
+        fleet = Fleet(workers, router="round_robin")
+        async with fleet:
+            # no yields: both queues hold work when the drain lands
+            futs = [fleet.submit_nowait(img) for img in imgs]
+            drained = await fleet.drain("a")
+            assert drained.draining
+            assert not drained.outstanding      # in-flight finished
+            outs = await asyncio.gather(*futs)
+            return outs, fleet.stats()
+
+    outs, stats = asyncio.run(main())
+    for out, ref in zip(outs, _ref_outputs(compiled_plan, imgs)):
+        np.testing.assert_array_equal(out, ref)
+    assert stats["served"] == len(imgs)          # zero lost
+    assert stats["rerouted"] > 0                 # the queue moved over
+    assert stats["workers"]["a"]["draining"]
+
+
+def test_fleet_failure_retry_ejection_and_probe_readmission(
+        compiled_plan):
+    """A worker whose dispatches explode takes health strikes, gets
+    ejected, and its requests are retried elsewhere — clients see
+    results, not errors.  Once healed, the probe canary re-admits it."""
+    _, compiled = compiled_plan
+
+    class _Exploding:
+        def __init__(self, inner):
+            self._inner = inner
+            self.broken = True
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def __call__(self, *a, **k):
+            if self.broken:
+                raise RuntimeError("device exploded")
+            return self._inner(*a, **k)
+
+    gw_bad = _gateway(compiled_plan)
+    bomb = _Exploding(compiled)
+    gw_bad.plans["cnn"].compiled = bomb
+    workers = [
+        FleetWorker("bad", gw_bad, "edge",
+                    health=HealthPolicy(eject_after=1,
+                                        probe_interval=0.05)),
+        FleetWorker("good", _gateway(compiled_plan), "v5e"),
+    ]
+    imgs = compiled.sample_images(6)
+
+    async def main():
+        # least-loaded prefers the cheaper "bad" worker when idle
+        fleet = Fleet(workers, router="least_loaded")
+        async with fleet:
+            out0 = await fleet.infer(imgs[0])    # explodes, retried
+            assert workers[0].health.ejections == 1
+            # while ejected (probe not yet due) everything lands on good
+            outs = await asyncio.gather(
+                *[await fleet.submit(img) for img in imgs[1:4]])
+            await asyncio.sleep(0.06)            # probe comes due
+            bomb.broken = False                  # the worker heals
+            out4 = await fleet.infer(imgs[4])    # the canary
+            assert workers[0].health.healthy
+            out5 = await fleet.infer(imgs[5])
+            return [out0, *outs, out4, out5], fleet.stats()
+
+    outs, stats = asyncio.run(main())
+    for out, ref in zip(outs, _ref_outputs(compiled_plan, imgs)):
+        np.testing.assert_array_equal(out, ref)
+    assert stats["served"] == 6                  # every client served
+    assert stats["worker_failures"] >= 1
+    assert stats["retried"] >= 1
+    assert stats["workers"]["bad"]["probes"] >= 1
+
+
+def test_fleet_stats_surface(compiled_plan):
+    workers = [FleetWorker("w0", _gateway(compiled_plan), "v5e")]
+
+    async def main():
+        fleet = Fleet(workers)
+        async with fleet:
+            return fleet.stats()
+
+    stats = asyncio.run(main())
+    w = stats["workers"]["w0"]
+    assert stats["router"] == "plan_aware"
+    assert w["profile"] == "v5e" and w["plans"] == ["cnn"]
+    assert w["healthy"] and w["routable"] and not w["draining"]
+    snap = w["snapshot"]
+    assert snap["queue_depth"] == 0 and snap["inflight"] == 0
+    assert snap["max_batch"] == 4

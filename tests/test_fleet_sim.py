@@ -1,0 +1,147 @@
+"""Virtual-clock fleet simulation: seeded-trace determinism, bit-exact
+run reproducibility, plan-aware tier placement, and the graceful-drain
+regression (zero lost, zero late-served re-routed requests).  The
+reduced-scale SLO acceptance run (the CI ``fleet`` job's workload) is
+marked ``fleet`` and excluded from tier-1."""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.fleet import (DEFAULT_TIERS, SimWorkerSpec, make_trace,
+                         profile_speed, simulate)
+from repro.fleet.sim import V5E_IMAGE_S, V5E_OVERHEAD_S
+
+SPECS = (SimWorkerSpec("w0-edge", "edge"),
+         SimWorkerSpec("w1-v5e", "v5e"),
+         SimWorkerSpec("w2-v5p", "v5p"))
+
+
+def _rate(occupancy=2.2, max_batch=8):
+    """Offered load as a multiple of one v5e's full-batch capacity."""
+    return occupancy * max_batch / (V5E_OVERHEAD_S
+                                    + max_batch * V5E_IMAGE_S)
+
+
+def test_trace_is_seed_deterministic():
+    a = make_trace(2000, _rate(), seed=7)
+    b = make_trace(2000, _rate(), seed=7)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    np.testing.assert_array_equal(a.tier_idx, b.tier_idx)
+    np.testing.assert_array_equal(a.deadlines, b.deadlines)
+    c = make_trace(2000, _rate(), seed=8)
+    assert not np.array_equal(a.arrivals, c.arrivals)
+    # tier shares land near their spec at this n
+    for t, (name, spec) in enumerate(DEFAULT_TIERS.items()):
+        frac = float(np.mean(a.tier_idx == t))
+        assert abs(frac - spec.share) < 0.05, (name, frac)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        make_trace(0, _rate())
+    with pytest.raises(ValueError):
+        make_trace(10, 0.0)
+
+
+def test_profile_speeds_are_catalog_ratios():
+    edge, v5e, v5p = (s.resolve_profile() for s in SPECS)
+    assert profile_speed(v5e) == pytest.approx(1.0)
+    assert profile_speed(edge) == pytest.approx(0.1)
+    assert profile_speed(v5p) > 2.0
+
+
+def test_sim_is_bit_reproducible():
+    """Same trace, same router → byte-identical result payloads (what
+    lets BENCH_fleet.json be committed and diffed)."""
+    trace = make_trace(5000, _rate(), seed=42)
+    a = simulate(SPECS, trace, "plan_aware")
+    b = simulate(SPECS, trace, "plan_aware")
+    assert json.dumps(a.to_payload()) == json.dumps(b.to_payload())
+
+
+def test_sim_completes_everything_under_every_router():
+    trace = make_trace(5000, _rate(), seed=42)
+    for router in ("round_robin", "least_loaded", "plan_aware"):
+        r = simulate(SPECS, trace, router)
+        assert r.lost == 0 and r.completed == len(trace), router
+        assert sum(w["served"] for w in r.per_worker.values()) \
+            == len(trace)
+
+
+def test_sim_validation():
+    trace = make_trace(10, _rate())
+    with pytest.raises(ValueError, match="duplicate"):
+        simulate((SPECS[0], SPECS[0]), trace)
+    with pytest.raises(ValueError, match="go together"):
+        simulate(SPECS, trace, drain_at=1.0)
+
+
+def test_plan_aware_places_tiers_on_matching_profiles():
+    """The router's economics show up in placement: essentially all
+    interactive traffic lands on the fast tiers, and the edge part
+    earns its keep on undeadlined work."""
+    trace = make_trace(20_000, _rate(), seed=42)
+    r = simulate(SPECS, trace, "plan_aware")
+    assert r.all_slos_met and r.late == 0
+    edge = r.per_worker["w0-edge"]["served_by_tier"]
+    interactive_total = r.per_tier["interactive"]["served"]
+    assert edge.get("interactive", 0) <= 0.01 * interactive_total
+    assert r.per_worker["w0-edge"]["served"] > 0
+    # and the fast tier carries the deadline traffic
+    fast = r.per_worker["w2-v5p"]["served_by_tier"]
+    assert fast.get("interactive", 0) >= 0.5 * interactive_total
+
+
+def test_drain_regression_zero_lost_zero_late():
+    """The graceful-drain invariant the fleet benchmark pins, as a
+    regression test: draining the v5e mid-trace re-routes its queue and
+    loses nothing — every request completes, and no re-routed request
+    with a deadline is served past it."""
+    trace = make_trace(20_000, _rate(), seed=42)
+    r = simulate(SPECS, trace, "plan_aware",
+                 drain_at=0.4 * float(trace.arrivals[-1]),
+                 drain_worker="w1-v5e")
+    assert r.completed == len(trace) and r.lost == 0
+    assert r.rerouted > 0                    # the drain had a queue
+    assert r.late_rerouted == 0              # nothing served late by it
+    assert r.per_worker["w1-v5e"]["drained"]
+    assert r.all_slos_met                    # fleet absorbs the drain
+
+
+def test_drain_after_trace_end_is_a_noop_drain():
+    trace = make_trace(500, _rate(), seed=1)
+    r = simulate(SPECS, trace, "plan_aware",
+                 drain_at=1e9, drain_worker="w1-v5e")
+    assert r.completed == len(trace) and r.rerouted == 0
+    assert r.per_worker["w1-v5e"]["drained"]
+
+
+# ---------------------------------------------------------------------------
+# reduced-scale SLO acceptance — the CI `fleet` job (-m fleet)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet
+def test_fleet_bench_reduced_scale_acceptance(tmp_path):
+    """The benchmark's own acceptance gates at CI scale (50k requests):
+    plan-aware meets every SLO the single v5e misses, beats round-robin
+    on deadline-tier p99, and the mid-trace drain loses nothing."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import fleet_bench
+
+    payload = fleet_bench.run(tmp_path / "BENCH_fleet.json",
+                              requests=50_000)
+    acc = payload["acceptance"]
+    assert payload["accepted"]
+    assert acc["single_v5e_missed_tiers"]          # overload is real
+    assert acc["plan_aware_meets_single_missed"]
+    assert acc["plan_aware_all_slos_met"]
+    assert acc["plan_aware_beats_round_robin_deadline_p99"]
+    assert acc["drain_rerouted"] > 0
+    assert acc["drain_zero_lost"] and acc["drain_zero_late_rerouted"]
+    # the recorded artifact exists and round-trips
+    again = json.loads((tmp_path / "BENCH_fleet.json").read_text())
+    assert again["accepted"] and again["requests"] == 50_000
