@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Acceptance gate for ``BENCH_async_serve.json`` (async gateway vs
+tick loop).
+
+The adaptive-admission gateway must dominate the seed's tick loop on
+throughput and win decisively on overload latency:
+
+  * ``speedup_images_per_sec >= 1.0`` at **every** occupancy — the
+    bounded, adaptive front door may never cost images/sec versus
+    blind unbounded queueing;
+  * ``p99_ratio_async_vs_tick <= 0.7`` at occupancy 2.0 — the wait
+    budget must actually cap tail latency under overload, not just
+    relabel the queue.
+
+Run after regenerating the bench (CI sweep job does both):
+
+    python benchmarks/async_serve_bench.py
+    python scripts/check_async_bench.py [BENCH_async_serve.json]
+
+Exits non-zero with a per-occupancy verdict when the artifact misses
+either bar.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+MIN_SPEEDUP = 1.0
+MAX_P99_RATIO_AT_2X = 0.7
+P99_GATED_OCCUPANCY = 2.0
+
+
+def check(path: str | Path) -> int:
+    payload = json.loads(Path(path).read_text())
+    rows = payload.get("occupancy_results", [])
+    if not rows:
+        print(f"FAIL {path}: no occupancy_results")
+        return 1
+    failures = 0
+    for row in rows:
+        occ = row["occupancy"]
+        speedup = row["speedup_images_per_sec"]
+        p99_ratio = row["p99_ratio_async_vs_tick"]
+        problems = []
+        if speedup < MIN_SPEEDUP:
+            problems.append(
+                f"speedup {speedup:.3f} < {MIN_SPEEDUP}")
+        if occ == P99_GATED_OCCUPANCY and \
+                p99_ratio > MAX_P99_RATIO_AT_2X:
+            problems.append(
+                f"p99 ratio {p99_ratio:.3f} > {MAX_P99_RATIO_AT_2X}")
+        verdict = "FAIL" if problems else "ok"
+        failures += bool(problems)
+        print(f"{verdict}  occ={occ:g}  speedup={speedup:.3f}x  "
+              f"p99_ratio={p99_ratio:.3f}"
+              + (f"  [{'; '.join(problems)}]" if problems else ""))
+    if failures:
+        print(f"FAIL: {failures}/{len(rows)} occupancies miss "
+              f"acceptance")
+        return 1
+    print("acceptance: async >= tick images/sec at every occupancy, "
+          "p99 <= 0.7x at 2x overload")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1
+                   else "BENCH_async_serve.json"))

@@ -38,7 +38,7 @@ from __future__ import annotations
 import asyncio
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -218,6 +218,26 @@ class Fleet:
             self._attach(fr, worker, wfut)
             return fr.future
 
+    def submit_chunk(self, images, *, plan_id: Optional[str] = None,
+                     tier: str = "best_effort", priority: int = 0,
+                     deadline: Optional[float] = None
+                     ) -> Tuple[list, int]:
+        """Admit a batch of images *partially*: each image routes
+        independently (so a chunk may span workers), and the first
+        ``FleetSaturated`` stops admission — the admitted prefix is
+        returned as ``(futures, refused)`` instead of all-or-nothing.
+        ``NoWorkerAvailable`` still raises: a fleet with no admissible
+        worker is an outage, not saturation."""
+        futs: list = []
+        for image in images:
+            try:
+                futs.append(self.submit_nowait(
+                    image, plan_id=plan_id, tier=tier,
+                    priority=priority, deadline=deadline))
+            except FleetSaturated:
+                return futs, len(images) - len(futs)
+        return futs, 0
+
     async def submit(self, image, *, plan_id: Optional[str] = None,
                      tier: str = "best_effort", priority: int = 0,
                      deadline: Optional[float] = None
@@ -319,6 +339,12 @@ class Fleet:
                 ev.set()
         if wfut.cancelled():
             if fr.client_cancelled:
+                # the *client* walked away — the worker did nothing
+                # wrong, but it may have been mid-probe with this very
+                # request as its canary: leave the probe state cleared
+                # (note_neutral), or an ejected worker would stay
+                # "probing" forever and never become routable again
+                worker.health.note_neutral()
                 self.cancelled += 1
                 if not fr.future.done():
                     fr.future.cancel()

@@ -55,16 +55,21 @@ class WorkerView:
     ``rate`` is the worker's estimated service rate in images/sec (its
     device profile's relative speed × the measured or modeled per-image
     time); ``est_wait`` — outstanding work over that rate — is the one
-    load metric every router shares.
+    load metric every router shares.  When the worker reports a
+    *measured* wait (``GatewayStats.est_wait``, the gateway's own EWMA
+    throughput applied to its own backlog), ``est_wait_s`` carries it
+    and takes precedence over the depth-over-nominal-rate inference.
     """
 
     __slots__ = ("worker_id", "cost", "plan_ids", "queue_depth",
-                 "inflight", "max_batch", "rate", "healthy", "draining")
+                 "inflight", "max_batch", "rate", "healthy", "draining",
+                 "est_wait_s")
 
     def __init__(self, worker_id: str, *, cost: float, plan_ids,
                  rate: float, max_batch: int = 8, queue_depth: int = 0,
                  inflight: int = 0, healthy: bool = True,
-                 draining: bool = False):
+                 draining: bool = False,
+                 est_wait_s: Optional[float] = None):
         self.worker_id = worker_id
         self.cost = float(cost)
         self.plan_ids = frozenset(plan_ids)
@@ -74,6 +79,7 @@ class WorkerView:
         self.inflight = int(inflight)
         self.healthy = bool(healthy)
         self.draining = bool(draining)
+        self.est_wait_s = None if est_wait_s is None else float(est_wait_s)
 
     @property
     def accepting(self) -> bool:
@@ -81,7 +87,11 @@ class WorkerView:
         return self.healthy and not self.draining
 
     def est_wait(self) -> float:
-        """Seconds of outstanding work ahead of a new arrival."""
+        """Seconds of outstanding work ahead of a new arrival: the
+        worker's measured estimate when it reports one, otherwise
+        inferred from queue depth over the nominal rate."""
+        if self.est_wait_s is not None:
+            return self.est_wait_s
         return (self.queue_depth + self.inflight) / max(self.rate, 1e-9)
 
     def __repr__(self) -> str:                    # pragma: no cover

@@ -150,6 +150,7 @@ class _SimWorker:
             spec.worker_id, cost=self.profile.cost,
             plan_ids=spec.plan_ids, rate=spec.max_batch / full,
             max_batch=spec.max_batch)
+        self.view.est_wait_s = 0.0
         self.queue: List[Tuple[tuple, int, int]] = []   # (key, seq, req)
         self.busy = False
         self.served = 0
@@ -159,6 +160,17 @@ class _SimWorker:
 
     def service_s(self, n: int) -> float:
         return self.overhead_s + n * self.per_image_s
+
+    def sync_wait(self) -> None:
+        """Publish the view's reported wait after a queue/inflight
+        mutation — the sim's stand-in for ``GatewayStats.est_wait``
+        (the live gateway measures its rate; the sim's rate *is* its
+        service model, so backlog over rate is exact).  Same float
+        expression as the view's depth-over-rate fallback, so routing
+        decisions — and the committed benchmark — are bit-identical to
+        a view that reports no measured wait."""
+        v = self.view
+        v.est_wait_s = (v.queue_depth + v.inflight) / max(v.rate, 1e-9)
 
 
 @dataclass
@@ -246,6 +258,7 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         key = (-int(tier_prio[tier_idx[req]]), float(deadlines[req]), seq)
         heapq.heappush(w.queue, (key, seq, req))
         w.view.queue_depth += 1
+        w.sync_wait()
 
     def start_batch(w: _SimWorker, now: float) -> None:
         nonlocal eseq
@@ -257,6 +270,7 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
             batch.append(req)
         w.view.queue_depth -= len(batch)
         w.view.inflight = len(batch)
+        w.sync_wait()
         w.busy = batch
         svc = w.service_s(len(batch))
         w.busy_s += svc
@@ -287,6 +301,7 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         evicted = [req for _, _, req in sorted(w.queue)]
         w.queue.clear()
         w.view.queue_depth = 0
+        w.sync_wait()
         for req in evicted:
             rerouted += 1
             rerouted_mask[req] = True
@@ -306,6 +321,7 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
             batch = w.busy
             w.busy = False
             w.view.inflight = 0
+            w.sync_wait()
             w.batches += 1
             for req in batch:
                 lat[req] = now - arrivals[req]

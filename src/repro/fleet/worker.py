@@ -80,10 +80,18 @@ class FleetWorker:
         health machine and yields an unroutable view instead of
         raising into the routing path."""
         now = clock() if now is None else now
+        rate, est_wait_s = self.rate, None
         try:
             snap = self.gateway.snapshot()
             queue_depth, inflight = snap.queue_depth, snap.inflight
             max_batch = snap.max_batch
+            # prefer the gateway's *measured* throughput telemetry over
+            # the profile-relative nominal rate once the EWMA has warmed
+            # up — routers then compare real waits, not modeled ones
+            measured = getattr(snap, "service_rate", 0.0)
+            if measured and measured > 0.0:
+                rate = measured
+                est_wait_s = snap.est_wait
             reachable = True
         except Exception:           # noqa: BLE001 — unreachable worker
             self.health.note_failure(now)
@@ -92,10 +100,10 @@ class FleetWorker:
             reachable = False
         return WorkerView(
             self.worker_id, cost=self.profile.cost,
-            plan_ids=self.plan_ids, rate=self.rate, max_batch=max_batch,
+            plan_ids=self.plan_ids, rate=rate, max_batch=max_batch,
             queue_depth=queue_depth, inflight=inflight,
             healthy=reachable and self.health.routable(now),
-            draining=self.draining)
+            draining=self.draining, est_wait_s=est_wait_s)
 
     def __repr__(self) -> str:                    # pragma: no cover
         return (f"FleetWorker({self.worker_id!r}, "

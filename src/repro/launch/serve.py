@@ -26,7 +26,8 @@ aware batch formation, a new bucket dispatch the moment slots free:
 
   PYTHONPATH=src python -m repro.launch.serve --workload cnn --async \
       --requests 128 --max-batch 8 --occupancy 2.0 \
-      [--deadline-ms 250] [--max-pending 32]
+      [--deadline-ms 250] [--max-pending 32] \
+      [--wait-budget-ms 100] [--max-inflight 2]
 
 Fleet workload — the multi-worker front door from ``repro.fleet``: one
 gateway per device profile (edge / v5e / v5p, each serving the plan the
@@ -145,9 +146,13 @@ def run_cnn_async(args) -> None:
     plan = _cnn_plan(args)
     mesh = cnn_data_mesh() if args.shard else None
     t0 = time.time()
+    wait_budget = (args.wait_budget_ms / 1e3
+                   if args.wait_budget_ms else None)
     gw = AsyncCNNGateway.from_plan(
         plan, AsyncServeConfig(max_batch=args.max_batch,
-                               max_pending=args.max_pending),
+                               max_pending=args.max_pending,
+                               max_inflight=args.max_inflight,
+                               wait_budget_s=wait_budget),
         mesh=mesh)
     compiled = gw.plans["plan0"].compiled
     print(f"[serve] AOT warmup: {len(compiled.buckets)} buckets × "
@@ -206,7 +211,14 @@ def run_cnn_async(args) -> None:
               f"p95={pct['p95_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms")
     print(f"[serve] occupancy histogram: {stats['occupancy_hist']}  "
           f"policy: {stats['policy']}  pending bound: "
-          f"{stats['max_pending']}")
+          f"{stats['max_pending']}"
+          + (f" (adaptive, budget "
+             f"{stats['wait_budget_s'] * 1e3:.0f}ms)"
+             if stats['wait_budget_s'] else " (static)"))
+    print(f"[serve] measured service rate "
+          f"{stats['service_rate']:.0f} images/s, est wait "
+          f"{stats['est_wait'] * 1e3:.1f}ms, shed at bound: "
+          f"{stats['shed']}")
 
 
 def run_cnn_fleet(args) -> None:
@@ -336,7 +348,17 @@ def main():
                     help="offered load as a multiple of full-batch "
                          "service capacity (cnn --async)")
     ap.add_argument("--max-pending", type=int, default=32,
-                    help="gateway admission bound (cnn --async)")
+                    help="gateway admission bound — the hard cap when "
+                         "--wait-budget-ms makes it adaptive "
+                         "(cnn --async)")
+    ap.add_argument("--wait-budget-ms", type=float, default=None,
+                    help="adaptive admission: size the pending bound to "
+                         "measured service rate × this wait budget "
+                         "(cnn --async)")
+    ap.add_argument("--max-inflight", type=int, default=1,
+                    help="concurrent gateway dispatches; 2 overlaps the "
+                         "next batch with the one on-device "
+                         "(cnn --async)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline; late requests are "
                          "expired, never served late (cnn --async)")

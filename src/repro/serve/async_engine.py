@@ -10,7 +10,21 @@ vLLM-style request-level scheduler adapted to feed-forward CNN serving:
                 backpressure (awaits space); ``submit_nowait`` raises
                 ``GatewayBacklog`` — traffic beyond the bound is
                 refused at the door, never absorbed into an unbounded
-                queue whose tail latency grows without limit.
+                queue whose tail latency grows without limit.  The
+                bound itself is **adaptive** when ``wait_budget_s`` is
+                set: it tracks measured service rate × the wait budget
+                (clamped to [``min_pending``, ``max_pending``]), so the
+                queue holds exactly as much work as the hardware can
+                clear inside the budget — the paper's resource-driven
+                sizing applied to the one serving-tier resource,
+                admission capacity.  At the bound, shedding is
+                **class-aware**: a ``submit_nowait`` arrival that
+                outranks the least-urgent pending request (the policy's
+                ``shed_key`` order — best-effort sheds first) ejects it
+                with ``GatewayBacklog`` instead of being refused
+                itself.  ``submit_chunk`` admits request batches
+                *partially* — free capacity worth of images instead of
+                all-or-nothing.
   continuous    the drain task launches a new ``CompiledCNN`` bucket
                 dispatch **the moment slots free up** — no global tick.
                 Dispatches run in a worker thread pool, so the event
@@ -48,6 +62,7 @@ from __future__ import annotations
 
 import asyncio
 import heapq
+import math
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -93,7 +108,7 @@ class AsyncRequest:
     deadline: Optional[float] = None
     arrived_at: float = 0.0
     # terminal state, set exactly once by the scheduling core:
-    # pending → done | expired | cancelled | failed
+    # pending → done | expired | cancelled | failed | shed
     status: str = "pending"
     output: Optional[np.ndarray] = None
     error: Optional[BaseException] = None
@@ -121,6 +136,19 @@ class AsyncRequest:
             self._on_done(self)
 
 
+class _ShedProbe:
+    """Stand-in for a not-yet-built request in shed-order comparisons.
+    Policies read ``priority``/``deadline`` duck-typed, so this is all
+    ``AdmissionQueue.outranked_by`` needs to decide admission at the
+    bound without constructing the real request first."""
+
+    __slots__ = ("priority", "deadline")
+
+    def __init__(self, priority: int, deadline: Optional[float]):
+        self.priority = priority
+        self.deadline = deadline
+
+
 class AdmissionQueue:
     """Bounded, policy-ordered pending set with deadline expiry — the
     synchronous scheduling core of the gateway.
@@ -144,6 +172,12 @@ class AdmissionQueue:
         self._seq = 0
         self._live = 0                 # pending entries (≤ max_pending)
         self.expired: int = 0          # finished with DeadlineExpired
+        self.shed: int = 0             # ejected for a higher-class arrival
+        # upper bound on the max pending shed_key (None = unknown):
+        # lets ``outranked_by`` answer the common full-queue refusal in
+        # O(1).  Removals leave it stale-high (safe: forces a scan),
+        # admissions raise it, scans refresh it exactly.
+        self._shed_ceiling: Optional[tuple] = None
 
     def __len__(self) -> int:
         return self._live
@@ -151,6 +185,13 @@ class AdmissionQueue:
     @property
     def full(self) -> bool:
         return self._live >= self.max_pending
+
+    def resize(self, max_pending: int) -> None:
+        """Set a new admission bound (adaptive admission's seam).
+        Shrinking below the current live count evicts nothing — the
+        queue simply reads as full until it drains back under the new
+        bound; growing takes effect on the next ``admit``."""
+        self.max_pending = max(1, int(max_pending))
 
     def note_terminal(self) -> None:
         """A queued request reached a terminal state outside the queue
@@ -160,7 +201,15 @@ class AdmissionQueue:
     def admit(self, req: AsyncRequest, now: float) -> bool:
         """Queue ``req``; False when at the bound (caller backpressures
         or rejects).  A request already past its deadline is expired on
-        the spot — it never occupies a slot of the bound."""
+        the spot — it never occupies a slot of the bound.  A request
+        that is already *terminal* (e.g. its future was cancelled while
+        ``submit`` awaited backpressure) is likewise handled without
+        queueing: admitting it would bump the live count for an entry
+        whose terminal hook has already run (or never will), leaking a
+        slot of the bound on every occurrence until the gateway refuses
+        all traffic."""
+        if req.status != "pending":
+            return True                # already terminal: never queued
         if policy_mod.expired(req, now):
             self.expired += 1
             req._finish("expired", error=DeadlineExpired(
@@ -171,9 +220,68 @@ class AdmissionQueue:
         heapq.heappush(
             self._heap, (self.policy.key(req, self._seq, now),
                          self._seq, req))
+        shed_key = self.policy.shed_key(req, self._seq, now)
+        if self._shed_ceiling is None or shed_key > self._shed_ceiling:
+            self._shed_ceiling = shed_key
         self._seq += 1
         self._live += 1
         return True
+
+    def outranked_by(self, probe, now: float) -> bool:
+        """True when some pending entry sheds below ``probe`` — i.e. a
+        request of the probe's class arriving *now* would take a
+        victim's slot instead of being refused.  ``probe`` only needs
+        ``priority``/``deadline`` (policies read them duck-typed), so
+        the gateway can answer "would this be refused?" at the bound
+        *before* paying for request construction — under overload the
+        refused path is the hot path.
+
+        That hot path is O(1) in the common case: ``_shed_ceiling``
+        upper-bounds every pending shed_key (sound because both
+        built-in policies' shed keys are time-invariant once assigned),
+        so a probe at or above the ceiling is refused without touching
+        the heap.  Only a probe *below* the ceiling pays for a scan,
+        which re-tightens the ceiling to the exact maximum."""
+        candidate = self.policy.shed_key(probe, self._seq, now)
+        ceiling = self._shed_ceiling
+        if ceiling is not None and candidate >= ceiling:
+            return False
+        best = None
+        for _, seq, queued in self._heap:
+            if queued.status == "pending":
+                k = self.policy.shed_key(queued, seq, now)
+                if best is None or k > best:
+                    best = k
+        self._shed_ceiling = best
+        return best is not None and best > candidate
+
+    def shed_victim(self, req: AsyncRequest, now: float
+                    ) -> Optional[AsyncRequest]:
+        """Class-aware shedding at the bound: locate the least-urgent
+        pending entry (maximal ``policy.shed_key`` — the same order
+        batches form in, reversed) and, **iff** the incoming ``req``
+        strictly outranks it, finish the victim with ``GatewayBacklog``
+        and free its admission slot so ``req`` can take it.  Returns
+        the victim, or ``None`` when ``req`` is itself the least
+        urgent (the caller refuses it — under FIFO nothing ever
+        outranks a queued request, so shedding degenerates to plain
+        refusal)."""
+        candidate = self.policy.shed_key(req, self._seq, now)
+        worst_key, victim = None, None
+        for _, seq, queued in self._heap:
+            if queued.status != "pending":
+                continue               # lazy-deleted entry
+            k = self.policy.shed_key(queued, seq, now)
+            if worst_key is None or k > worst_key:
+                worst_key, victim = k, queued
+        if victim is None or worst_key <= candidate:
+            return None
+        self._live -= 1
+        self.shed += 1
+        victim._finish("shed", error=GatewayBacklog(
+            f"request {victim.request_id} shed at the admission bound "
+            f"for a higher-class arrival"))
+        return victim
 
     def pop_batch(self, max_n: int, now: float
                   ) -> Tuple[Optional[str], List[AsyncRequest]]:
@@ -225,11 +333,24 @@ class AdmissionQueue:
 
 @dataclass
 class AsyncServeConfig:
-    max_batch: int = 8             # slot-pool size = top AOT bucket
+    max_batch: int = 8             # dispatch width = top AOT bucket
     max_pending: int = 64          # admission bound (queued, not in-flight)
     max_inflight: int = 1          # concurrent bucket dispatches
     policy: PolicyLike = "edf"     # batch-formation order
     aot_warmup: bool = True        # pre-compile all buckets at register
+    # adaptive admission (None = static bound, the pre-adaptive behavior):
+    # the bound tracks ceil(measured service_rate × wait_budget_s),
+    # clamped to [min_pending (default max_batch), max_pending] — the
+    # queue holds what the hardware clears inside the budget, no more.
+    wait_budget_s: Optional[float] = None
+    min_pending: Optional[int] = None
+    # batch coalescing: with an idle pool and a *partial* batch queued,
+    # wait up to ``batch_linger × (max_batch / measured rate)`` seconds
+    # (woken early by every new arrival) for the batch to fill before
+    # dispatching.  A k=1 sliver costs a whole dispatch slot the same
+    # ~full-batch service time costs — during an overload ramp those
+    # slivers are pure capacity loss.  0 disables (dispatch instantly).
+    batch_linger: float = 0.0
 
 
 class _PlanEntry:
@@ -259,18 +380,40 @@ class AsyncCNNGateway(SlotPool):
     def __init__(self, cfg: Optional[AsyncServeConfig] = None, *,
                  clock: Callable[[], float] = time.monotonic):
         cfg = cfg if cfg is not None else AsyncServeConfig()
-        super().__init__(cfg.max_batch)
         if cfg.max_inflight < 1:
             raise ValueError(f"max_inflight={cfg.max_inflight} must be ≥ 1")
+        if cfg.wait_budget_s is not None and cfg.wait_budget_s <= 0:
+            raise ValueError(
+                f"wait_budget_s={cfg.wait_budget_s} must be > 0 "
+                f"(or None for a static bound)")
+        if cfg.min_pending is not None and cfg.min_pending < 1:
+            raise ValueError(
+                f"min_pending={cfg.min_pending} must be ≥ 1")
+        if cfg.batch_linger < 0.0:
+            raise ValueError(
+                f"batch_linger={cfg.batch_linger} must be ≥ 0")
+        # the slot pool holds one dispatch-width batch per allowed
+        # in-flight dispatch: with max_inflight > 1 the next batch can
+        # occupy slots (and launch) while the previous is on-device —
+        # dispatch width itself stays cfg.max_batch (see _drain).
+        super().__init__(cfg.max_batch * cfg.max_inflight, clock=clock)
         self.cfg = cfg
         self.clock = clock
         self.queue = AdmissionQueue(cfg.max_pending, cfg.policy)
         self.plans: Dict[str, _PlanEntry] = {}
         self.exec_cache = ExecutableCache()   # shared across all plans
         self._default_plan: Optional[str] = None
+        # one device, one execution stream: a single worker thread
+        # serialises device compute no matter how many dispatches are
+        # staged.  ``max_inflight > 1`` still pays off — the *next*
+        # batch's host-side prep (stack, future wiring) overlaps the
+        # current compute, and its executable starts the instant the
+        # stream frees with no event-loop round trip — but two
+        # executions never timeslice the same device, which on a
+        # host-shared device starves one dispatch into a straggler
+        # whose latency the rate estimator then reads as lost capacity.
         self._executor = ThreadPoolExecutor(
-            max_workers=cfg.max_inflight,
-            thread_name_prefix="repro-serve")
+            max_workers=1, thread_name_prefix="repro-serve")
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._wake: Optional[asyncio.Event] = None
         self._space: Optional[asyncio.Event] = None
@@ -278,6 +421,7 @@ class AsyncCNNGateway(SlotPool):
         self._closing = False
         self._inflight = 0             # dispatches currently launched
         self._next_id = 0
+        self._last_adapt = -math.inf   # rate-limits per-arrival resizes
         # counters (all mutated on the loop thread; read anywhere)
         self.served = 0
         self.rejected = 0
@@ -400,25 +544,103 @@ class AsyncCNNGateway(SlotPool):
             lambda f, r=req: r.cancel() if f.cancelled() else None)
         return req, fut
 
+    def _adapt_bound(self, force: bool = False) -> None:
+        """Resize the admission bound to what the hardware can clear
+        inside ``cfg.wait_budget_s`` at the *measured* service rate —
+        the paper's resource-driven sizing applied to admission
+        capacity.  No-op when no wait budget is configured (static
+        bound).  Until the rate estimator warms up (or after an idle
+        gap dilutes it to ~0) the bound floors at ``min_pending``
+        (default ``max_batch``: always one full batch admissible); it
+        never exceeds ``cfg.max_pending``, the configured hard cap.
+
+        The bound reads the **slow** rate horizon: shrinking the door
+        is a capacity commitment, and honouring it on a transient
+        stall would shed a burst the hardware will clear moments
+        later.  ``est_wait`` and routing keep the fast horizon.
+
+        Per-arrival calls are rate-limited to ~2 ms: under sustained
+        overload arrivals outnumber dispatches ~30:1, and resizing on
+        each one spends event-loop time recomputing a bound that only
+        moves when a step completes.  ``force=True`` (used on batch
+        completion, where the estimate actually changed) bypasses the
+        limiter."""
+        budget = self.cfg.wait_budget_s
+        if budget is None:
+            return
+        now = self.clock()
+        if not force and now - self._last_adapt < 2e-3:
+            return
+        self._last_adapt = now
+        floor = (self.cfg.min_pending if self.cfg.min_pending is not None
+                 else self.cfg.max_batch)
+        rate = self.service_rate_slow
+        bound = math.ceil(rate * budget) if rate > 0 else floor
+        self.queue.resize(max(floor, min(bound, self.cfg.max_pending)))
+        self._signal_space()          # a grown bound frees waiters
+
     def submit_nowait(self, image, *, plan_id: Optional[str] = None,
                       priority: int = 0, deadline: Optional[float] = None
                       ) -> "asyncio.Future":
         """Admit one image or raise ``GatewayBacklog`` when the pending
-        queue is at its bound (load shedding).  ``deadline`` is relative
-        seconds from now; the returned future resolves to the output
-        activations, raises ``DeadlineExpired``, or is cancelled."""
+        queue is at its bound (load shedding).  At the bound, shedding
+        is class-aware: if this arrival outranks the least-urgent
+        pending request (policy ``shed_key`` order), that request is
+        ejected — its future raises ``GatewayBacklog`` — and this one
+        takes its slot; otherwise this arrival is the one refused.
+        ``deadline`` is relative seconds from now; the returned future
+        resolves to the output activations, raises ``DeadlineExpired``,
+        or is cancelled."""
         self._ensure_started()
         if self._closing:
             raise RuntimeError("gateway is closing")
+        self._adapt_bound()
+        if self.queue.full:
+            # refuse *before* building the request: under sustained
+            # overload the refused path is the hot path, and paying
+            # image validation + future wiring per shed arrival steals
+            # event-loop time from dispatch
+            now = self.clock()
+            probe = _ShedProbe(
+                priority, None if deadline is None else now + deadline)
+            if not self.queue.outranked_by(probe, now):
+                self.rejected += 1
+                raise GatewayBacklog(
+                    f"pending queue at its bound "
+                    f"({self.queue.max_pending}); retry with backoff or "
+                    f"use `await submit(...)` for backpressure")
         req, fut = self._make_request(image, plan_id, priority, deadline)
-        if not self.queue.admit(req, self.clock()):
-            self.rejected += 1
-            raise GatewayBacklog(
-                f"pending queue at its bound "
-                f"({self.queue.max_pending}); retry with backoff or "
-                f"use `await submit(...)` for backpressure")
+        now = self.clock()
+        if not self.queue.admit(req, now):
+            victim = self.queue.shed_victim(req, now)
+            if victim is None or not self.queue.admit(req, now):
+                self.rejected += 1
+                raise GatewayBacklog(
+                    f"pending queue at its bound "
+                    f"({self.queue.max_pending}); retry with backoff or "
+                    f"use `await submit(...)` for backpressure")
         self._bookkeep_admitted(req)
         return fut
+
+    def submit_chunk(self, images, *, plan_id: Optional[str] = None,
+                     priority: int = 0, deadline: Optional[float] = None
+                     ) -> Tuple[List["asyncio.Future"], int]:
+        """Admit a *batch* of images partially: as many as the bound
+        has room for (in order), instead of all-or-nothing.  Returns
+        ``(futures, refused)`` where ``futures`` covers the admitted
+        prefix and ``refused`` counts the images that were shed at the
+        bound (each counted in ``rejected``).  A caller that cannot
+        tolerate partial admission should ``await submit`` per image
+        for backpressure instead."""
+        futs: List[asyncio.Future] = []
+        for image in images:
+            try:
+                futs.append(self.submit_nowait(
+                    image, plan_id=plan_id, priority=priority,
+                    deadline=deadline))
+            except GatewayBacklog:
+                return futs, len(images) - len(futs)
+        return futs, 0
 
     async def submit(self, image, *, plan_id: Optional[str] = None,
                      priority: int = 0, deadline: Optional[float] = None
@@ -434,12 +656,21 @@ class AsyncCNNGateway(SlotPool):
             raise RuntimeError("gateway is closing")
         req, fut = self._make_request(image, plan_id, priority, deadline)
         while True:
+            if self._closing:
+                # a wakeup from close() must *not* re-try admission:
+                # the drain task may already have exited, and a request
+                # admitted after that pends forever.  Fail it instead —
+                # its future resolves with the error.
+                if req.status == "pending":
+                    self.failed += 1
+                    req._finish("failed",
+                                error=RuntimeError("gateway is closing"))
+                return fut
+            self._adapt_bound()
             if self.queue.admit(req, self.clock()):
                 self._bookkeep_admitted(req)
                 return fut
             self._space.clear()
-            if self._closing:
-                raise RuntimeError("gateway is closing")
             if not self.queue.full:   # space freed before the clear —
                 continue              # re-check avoids a lost wakeup
             await self._space.wait()
@@ -473,6 +704,7 @@ class AsyncCNNGateway(SlotPool):
     async def _drain(self) -> None:
         loop = self._loop
         pending_flights = set()
+        linger_until: Optional[float] = None
         while True:
             self._wake.clear()
             free = self.free_slots()
@@ -480,9 +712,46 @@ class AsyncCNNGateway(SlotPool):
             # Only form a batch when a dispatch can actually *start*
             # (inflight < max_inflight): launching into a busy executor
             # would fragment what could be one full batch into slivers.
-            if free > 0 and len(self.queue) > 0 \
+            # Overlap policy: the first dispatch launches on any
+            # pending work, but a *concurrent* one (max_inflight > 1)
+            # requires a full batch of backlog — overlapping hides the
+            # Python-side dispatch gap under overload (throughput),
+            # while at low load two half-empty contending dispatches
+            # would only inflate latency.
+            pressure = (self._inflight == 0
+                        or len(self.queue) >= self.cfg.max_batch)
+            # Batch coalescing (cfg.batch_linger): an *idle* pool with
+            # a partial batch queued holds the dispatch briefly — each
+            # new admission wakes this wait, so the linger ends the
+            # moment the batch fills or the deadline passes.  A k=1
+            # sliver occupies a dispatch slot for ~a full batch's
+            # service time; during an overload ramp (queue filling in
+            # milliseconds) dispatching slivers forfeits real capacity.
+            want_linger = (self.cfg.batch_linger > 0.0 and free > 0
+                           and 0 < len(self.queue) < self.cfg.max_batch
+                           and self._inflight == 0 and not self._closing)
+            if not want_linger:
+                linger_until = None
+            elif linger_until is None:
+                rate = self.service_rate
+                linger_until = self.clock() + (
+                    self.cfg.batch_linger * self.cfg.max_batch / rate
+                    if rate > 0.0 else 0.0)
+            if want_linger and self.clock() < linger_until:
+                try:
+                    await asyncio.wait_for(
+                        self._wake.wait(),
+                        linger_until - self.clock())
+                except asyncio.TimeoutError:
+                    pass
+                continue
+            if free > 0 and len(self.queue) > 0 and pressure \
                     and self._inflight < self.cfg.max_inflight:
-                plan_id, batch = self.queue.pop_batch(free, self.clock())
+                # dispatch width is cfg.max_batch (the top AOT bucket),
+                # not the pool size — the pool is max_inflight batches
+                # wide so the next batch stages while one is on-device
+                width = min(free, self.cfg.max_batch)
+                plan_id, batch = self.queue.pop_batch(width, self.clock())
                 self._signal_space()
                 if batch:
                     slots = [self.occupy(r) for r in batch]
@@ -501,6 +770,7 @@ class AsyncCNNGateway(SlotPool):
 
     async def _run_batch(self, entry: _PlanEntry, batch, slots) -> None:
         compiled = entry.compiled
+        launched_at = self._rate_clock()
         alive = [r for r in batch if r.status == "pending"]
         try:
             if alive:
@@ -531,11 +801,12 @@ class AsyncCNNGateway(SlotPool):
                             r._finish("done", output=out[k])
                             self.served += 1
                             entry.served += 1
-                    self._note_step(len(alive))
+                    self._note_step(len(alive), launched_at=launched_at)
         finally:
             self._inflight -= 1
             for s in slots:
                 self.release(s)       # hooks re-wake the drain task
+            self._adapt_bound(force=True)   # fresh rate → fresh bound
             self._signal_space()
 
     # -- fleet draining seam ----------------------------------------------
@@ -599,14 +870,19 @@ class AsyncCNNGateway(SlotPool):
             "expired": snap.expired,
             "cancelled": snap.cancelled,
             "failed": snap.failed,
+            "shed": self.queue.shed,
             "aborted_dispatches": self.aborted_dispatches,
             "pending": snap.queue_depth,
             "inflight": snap.inflight,
             "max_pending": self.queue.max_pending,
-            "max_batch": snap.max_batch,
+            "wait_budget_s": self.cfg.wait_budget_s,
+            "max_batch": self.cfg.max_batch,
+            "slots": snap.max_batch,   # = max_batch × max_inflight
             "max_inflight": self.cfg.max_inflight,
             "policy": self.queue.policy.name,
             "steps": snap.steps,
             "occupancy_hist": dict(snap.occupancy_hist),
+            "service_rate": snap.service_rate,
+            "est_wait": snap.est_wait,
             "exec_cache": self.exec_cache.stats(),
         }

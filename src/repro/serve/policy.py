@@ -60,6 +60,19 @@ class SchedulingPolicy:
     def key(self, req, seq: int, now: float) -> Tuple:
         raise NotImplementedError
 
+    def shed_key(self, req, seq: int, now: float) -> Tuple:
+        """Shed order is the *reverse* of service order: when bounded
+        admission must eject a pending request to make room for a more
+        urgent arrival, the victim is the pending entry with the
+        **maximal** ``shed_key`` — by default the very key batches form
+        on, so the last request that would have been served is the
+        first one shed.  One ordering, two doors: batch formation and
+        admission shedding can never disagree about who is least
+        urgent.  Under FIFO the newest arrival always carries the
+        maximal key, so a newcomer never outranks anyone and shedding
+        degenerates to plain refusal — the seed behavior."""
+        return self.key(req, seq, now)
+
     def order(self, reqs: Sequence, now: float) -> List:
         """Requests sorted most-urgent-first (stable on arrival order)."""
         return [r for _, _, r in sorted(

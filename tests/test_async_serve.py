@@ -170,6 +170,135 @@ def test_admission_bound_and_deadline_invariants(ops_list, bound):
 
 
 # ---------------------------------------------------------------------------
+# adaptive admission: terminal-admit guard, shedding, resize, conservation
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_refuses_terminal_requests():
+    """Regression: a request that reached a terminal state before
+    admission (e.g. its future was cancelled while ``submit`` awaited
+    backpressure) must never be queued — pre-fix, ``admit`` pushed it
+    and bumped the live count for an entry whose terminal hook had
+    already run, leaking one slot of the bound per occurrence until
+    the gateway refused all traffic."""
+    q = AdmissionQueue(max_pending=2, policy="edf")
+    r = _req(0)
+    assert r.cancel()
+    assert q.admit(r, 0.0)              # handled (already terminal)...
+    assert len(q) == 0                  # ...but never queued
+    _, batch = q.pop_batch(8, 0.0)
+    assert batch == []
+    # the full bound is still admissible afterwards
+    assert q.admit(_req(1), 0.0) and q.admit(_req(2), 0.0)
+    assert q.full and len(q) == 2
+
+
+def test_admission_queue_shed_victim_and_probe():
+    """Class-aware shedding: at the bound a higher-priority arrival
+    ejects the least-urgent pending entry; a same-class arrival is
+    refused (``outranked_by`` answers without building the request)."""
+    q = AdmissionQueue(max_pending=2, policy="edf")
+    lo0, lo1 = _req(0, priority=0), _req(1, priority=0)
+    assert q.admit(lo0, 0.0) and q.admit(lo1, 0.0) and q.full
+    # same class: nothing pending sheds below it
+    assert not q.outranked_by(_req(2, priority=0), 0.0)
+    assert q.shed_victim(_req(2, priority=0), 0.0) is None
+    # higher class: the latest same-class arrival is the victim
+    hi = _req(3, priority=9)
+    assert q.outranked_by(hi, 0.0)
+    victim = q.shed_victim(hi, 0.0)
+    assert victim is lo1 and victim.status == "shed"
+    assert isinstance(victim.error, GatewayBacklog)
+    assert q.shed == 1 and len(q) == 1
+    assert q.admit(hi, 0.0) and q.full
+    # the cached shed ceiling stays correct across the removal: the
+    # same-class fast path still refuses, the scan path still sheds
+    assert not q.outranked_by(_req(4, priority=0), 0.0)
+    assert q.outranked_by(_req(5, priority=10), 0.0)
+    _, batch = q.pop_batch(8, 0.0)
+    assert [r.request_id for r in batch] == [3, 0]
+
+
+def test_admission_queue_resize_bound():
+    q = AdmissionQueue(max_pending=4, policy="fifo")
+    assert all(q.admit(_req(i), 0.0) for i in range(4))
+    q.resize(2)                   # shrink below live: nothing evicted
+    assert q.max_pending == 2 and len(q) == 4 and q.full
+    assert not q.admit(_req(9), 0.0)
+    _, batch = q.pop_batch(3, 0.0)
+    assert len(batch) == 3
+    assert q.admit(_req(4), 0.0) and q.full    # back under the bound
+    q.resize(0)
+    assert q.max_pending == 1                  # clamped: never zero
+
+
+if HAVE_HYPOTHESIS:
+    _conserve_ops = st.lists(st.tuples(
+        st.sampled_from(["admit", "admit_terminal", "cancel", "pop",
+                         "evict", "resize", "shed"]),
+        st.integers(0, 7),
+    ), min_size=1, max_size=80)
+else:                                        # pragma: no cover
+    _conserve_ops = None
+
+
+@settings(max_examples=80, deadline=None)
+@given(ops_list=_conserve_ops, bound=st.integers(1, 5))
+def test_admission_live_count_conservation(ops_list, bound):
+    """Property (the terminal-admit leak, generalized): across any
+    interleaving of admissions — including already-terminal requests —
+    cancellations, batch pops, drain evictions, bound resizes and
+    class-aware sheds, the live count always equals the number of
+    pending entries in the heap: the admission bound can neither leak
+    shut nor over-admit, and a full drain restores the whole bound."""
+    q = AdmissionQueue(max_pending=bound, policy="edf")
+    n = 0
+    hi_bound = bound                  # high-water admission bound seen
+    for op, arg in ops_list:
+        if op == "admit":
+            q.admit(_req(n), 0.0)
+            n += 1
+        elif op == "admit_terminal":
+            r = _req(n)
+            n += 1
+            assert r.cancel()
+            assert q.admit(r, 0.0)      # handled, never queued
+        elif op == "cancel":
+            pending = [r for _, _, r in q._heap
+                       if r.status == "pending"]
+            if pending:
+                assert pending[arg % len(pending)].cancel()
+                q.note_terminal()       # the gateway's terminal hook
+        elif op == "pop":
+            q.pop_batch(arg + 1, 0.0)
+        elif op == "evict":
+            for r in q.evict_pending():
+                # the gateway drain seam cancels each evicted request;
+                # its terminal hook frees the admission slot
+                assert r.cancel()
+                q.note_terminal()
+        elif op == "resize":
+            q.resize(arg + 1)
+            hi_bound = max(hi_bound, q.max_pending)
+        elif op == "shed":
+            r = _req(n, priority=arg)
+            n += 1
+            if not q.admit(r, 0.0):
+                v = q.shed_victim(r, 0.0)
+                if v is not None:
+                    assert v.status == "shed"
+                    assert q.admit(r, 0.0)
+        live_in_heap = sum(1 for _, _, r in q._heap
+                           if r.status == "pending")
+        assert len(q) == live_in_heap
+        assert 0 <= len(q) <= hi_bound
+    q.resize(bound)
+    q.pop_batch(10 ** 6, 0.0)
+    assert len(q) == 0
+    assert all(q.admit(_req(n + i), 0.0) for i in range(bound))
+    assert q.full
+
+
+# ---------------------------------------------------------------------------
 # the asyncio gateway end-to-end
 # ---------------------------------------------------------------------------
 
@@ -386,6 +515,205 @@ def test_gateway_policy_matches_sync_engine_ordering():
     _, batch = q.pop_batch(8, 0.0)
     assert [r.request_id for r in batch] \
         == [r.request_id for r in pol.order(reqs, 0.0)]
+
+
+# ---------------------------------------------------------------------------
+# gateway lifecycle regressions + adaptive admission end-to-end
+# ---------------------------------------------------------------------------
+
+def test_gateway_cancel_under_backpressure_recovers_full_bound():
+    """Regression, hammered: repeatedly fill the admission bound,
+    cancel every queued future, refill.  Each cancellation must free
+    exactly one slot of the bound — a leak shows up as the bound
+    shrinking round over round until nothing is admissible."""
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=4))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 4, seed=13)
+
+    async def main():
+        async with gw:
+            for _ in range(5):
+                # fill the bound without yielding to the drain task
+                futs = [gw.submit_nowait(img) for img in imgs]
+                with pytest.raises(GatewayBacklog):
+                    gw.submit_nowait(imgs[0])
+                for f in futs:
+                    f.cancel()
+                await asyncio.gather(*futs, return_exceptions=True)
+                assert len(gw.queue) == 0
+            # the whole bound is still admissible after the hammering
+            futs = [gw.submit_nowait(img) for img in imgs]
+            return await asyncio.gather(*futs)
+
+    outs = asyncio.run(main())
+    assert all(isinstance(o, np.ndarray) for o in outs)
+    stats = gw.stats()
+    assert stats["cancelled"] == 20 and stats["served"] == 4
+    assert stats["pending"] == 0
+
+
+def test_gateway_close_resolves_backpressured_submitters():
+    """Regression: submitters parked at the admission bound when the
+    gateway closes must all resolve — a waiter woken by ``close()``
+    that re-tried admission first could slip into the queue after the
+    drain task had already exited and pend forever."""
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=2))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 8, seed=14)
+
+    async def main():
+        async with gw:
+            queued = [gw.submit_nowait(img) for img in imgs[:2]]
+            waiters = [asyncio.ensure_future(gw.submit(img))
+                       for img in imgs[2:]]
+            await asyncio.sleep(0)      # park them at the bound
+        # __aexit__ → close(): every waiter must resolve promptly —
+        # either admitted-and-served before the drain exited, or
+        # failed with "gateway is closing"; none may hang
+        futs = await asyncio.wait_for(asyncio.gather(*waiters), 10.0)
+        return await asyncio.wait_for(
+            asyncio.gather(*queued, *futs, return_exceptions=True),
+            10.0)
+
+    outs = asyncio.run(main())
+    assert all(isinstance(o, (np.ndarray, RuntimeError)) for o in outs)
+    failed = [o for o in outs if isinstance(o, RuntimeError)]
+    assert sum(isinstance(o, np.ndarray) for o in outs) \
+        + len(failed) == 8
+    assert all("closing" in str(e) for e in failed)
+    assert gw.stats()["pending"] == 0
+
+
+def test_gateway_class_aware_shedding_at_the_bound():
+    """At the bound a higher-class arrival ejects the least-urgent
+    pending request instead of being refused: the victim's future
+    raises ``GatewayBacklog``, the arrival is served, and a same-class
+    arrival is still the one refused."""
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=2,
+                               policy="edf"))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 4, seed=15)
+
+    async def main():
+        async with gw:
+            lo = [gw.submit_nowait(img, priority=0)
+                  for img in imgs[:2]]
+            hi = gw.submit_nowait(imgs[2], priority=5)
+            with pytest.raises(GatewayBacklog):
+                gw.submit_nowait(imgs[3], priority=0)
+            return await asyncio.gather(*lo, hi,
+                                        return_exceptions=True)
+
+    done = asyncio.run(main())
+    shed = [d for d in done[:2] if isinstance(d, GatewayBacklog)]
+    assert len(shed) == 1                  # exactly one victim
+    assert isinstance(done[2], np.ndarray)  # the high-class arrival
+    assert sum(isinstance(d, np.ndarray) for d in done) == 2
+    stats = gw.stats()
+    assert stats["shed"] == 1 and stats["rejected"] == 1
+    assert stats["served"] == 2
+
+
+def test_gateway_submit_chunk_partial_admission():
+    plan = _plan()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=2, max_pending=3))
+    compiled = gw.plans["plan0"].compiled
+    imgs = _images(compiled, 5, seed=16)
+
+    async def main():
+        async with gw:
+            futs, refused = gw.submit_chunk(imgs)  # no yields: bound=3
+            assert len(futs) == 3 and refused == 2
+            outs = await asyncio.gather(*futs)
+            # with the queue drained the whole chunk fits
+            futs2, refused2 = gw.submit_chunk(imgs[:2])
+            assert refused2 == 0
+            return outs, await asyncio.gather(*futs2)
+
+    outs, outs2 = asyncio.run(main())
+    assert len(outs) == 3 and len(outs2) == 2
+    assert gw.stats()["rejected"] == 1     # chunk stops at the refusal
+
+
+def test_slot_pool_rate_estimator_busy_runs_and_idle_gaps():
+    from repro.serve.slots import SlotPool
+
+    t = [0.0]
+    pool = SlotPool(max_batch=8, clock=lambda: t[0])
+    assert pool.service_rate == 0.0 and pool.service_rate_slow == 0.0
+    # a full batch launched at t=0 completing at t=0.1 → 80 img/s
+    t[0] = 0.1
+    pool._note_step(8, launched_at=0.0)
+    assert pool.service_rate == pytest.approx(80.0)
+    assert pool.service_rate_slow == pytest.approx(80.0)
+    # a long idle gap, then a fresh run at the same speed: idle time
+    # must not dilute the estimate (a lull is not slowness)
+    t[0] = 100.1
+    pool._note_step(8, launched_at=100.0)
+    assert pool.service_rate == pytest.approx(80.0)
+    # sustained faster service: the fast horizon converges within the
+    # sliding window; the slow horizon (capacity commitments) lags
+    for _ in range(6):
+        t0 = t[0]
+        t[0] += 0.01                   # 8 images / 10 ms = 800 img/s
+        pool._note_step(8, launched_at=t0)
+    assert pool.service_rate > 400.0
+    assert pool.service_rate_slow < pool.service_rate
+    # est_wait derives from the fast rate in the same snapshot
+    snap = pool.snapshot(queue_depth=40)
+    assert snap.service_rate == pool.service_rate
+    assert snap.est_wait == pytest.approx(40 / pool.service_rate)
+
+
+def test_gateway_adaptive_bound_tracks_measured_rate():
+    t = [0.0]
+    gw = AsyncCNNGateway(
+        AsyncServeConfig(max_batch=4, max_pending=64, min_pending=6,
+                         wait_budget_s=0.5),
+        clock=lambda: t[0])
+    # no rate measured yet: the bound floors at min_pending
+    gw._adapt_bound(force=True)
+    assert gw.queue.max_pending == 6
+    # measured 40 img/s → bound = ceil(40 × 0.5) = 20
+    t[0] = 0.1
+    gw._note_step(4, launched_at=0.0)
+    gw._adapt_bound(force=True)
+    assert gw.queue.max_pending == 20
+    # a *sustained* faster rate grows it, capped at max_pending
+    for _ in range(200):
+        t0 = t[0]
+        t[0] += 0.001                  # 4000 img/s, far past the cap
+        gw._note_step(4, launched_at=t0)
+    gw._adapt_bound(force=True)
+    assert gw.queue.max_pending == 64
+    # without a wait budget the bound is static
+    gw2 = AsyncCNNGateway(AsyncServeConfig(max_batch=4, max_pending=7))
+    gw2._adapt_bound(force=True)
+    assert gw2.queue.max_pending == 7
+
+
+def test_async_serve_config_validation_and_pool_sizing():
+    with pytest.raises(ValueError, match="max_inflight"):
+        AsyncCNNGateway(AsyncServeConfig(max_batch=2, max_inflight=0))
+    with pytest.raises(ValueError, match="wait_budget_s"):
+        AsyncCNNGateway(AsyncServeConfig(max_batch=2,
+                                         wait_budget_s=0.0))
+    with pytest.raises(ValueError, match="min_pending"):
+        AsyncCNNGateway(AsyncServeConfig(max_batch=2, min_pending=0))
+    with pytest.raises(ValueError, match="batch_linger"):
+        AsyncCNNGateway(AsyncServeConfig(max_batch=2,
+                                         batch_linger=-0.1))
+    # the slot pool is max_inflight dispatch-widths wide so the next
+    # batch can stage (and prep) while one is on-device
+    gw = AsyncCNNGateway(AsyncServeConfig(max_batch=4, max_inflight=2))
+    assert gw.free_slots() == 8 and gw.cfg.max_batch == 4
 
 
 # ---------------------------------------------------------------------------

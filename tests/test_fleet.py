@@ -381,6 +381,95 @@ def test_fleet_failure_retry_ejection_and_probe_readmission(
     assert stats["workers"]["bad"]["probes"] >= 1
 
 
+def test_fleet_cancelled_canary_releases_probe(compiled_plan):
+    """Regression: a client cancelling the very request that was an
+    ejected worker's probe canary must clear the probing flag
+    (``note_neutral``) — pre-fix the worker stayed "probing" forever,
+    was never routable again, and the fleet silently shrank by one
+    worker even after it healed."""
+    _, compiled = compiled_plan
+
+    class _Exploding:
+        def __init__(self, inner):
+            self._inner = inner
+            self.broken = True
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def __call__(self, *a, **k):
+            if self.broken:
+                raise RuntimeError("device exploded")
+            return self._inner(*a, **k)
+
+    gw_bad = _gateway(compiled_plan)
+    bomb = _Exploding(compiled)
+    gw_bad.plans["cnn"].compiled = bomb
+    workers = [
+        FleetWorker("bad", gw_bad, "edge",
+                    health=HealthPolicy(eject_after=1,
+                                        probe_interval=0.05)),
+        FleetWorker("good", _gateway(compiled_plan), "v5e"),
+    ]
+    imgs = compiled.sample_images(3)
+
+    async def main():
+        # least-loaded prefers the cheaper "bad" worker when idle
+        fleet = Fleet(workers, router="least_loaded")
+        async with fleet:
+            await fleet.infer(imgs[0])           # explodes → ejected
+            assert not workers[0].health.healthy
+            await asyncio.sleep(0.06)            # probe comes due
+            canary = fleet.submit_nowait(imgs[1])
+            assert workers[0].health.probing     # it took the canary
+            canary.cancel()                      # client walks away
+            await asyncio.gather(canary, return_exceptions=True)
+            await asyncio.sleep(0)               # worker-side settles
+            # the probe slot is released (note_neutral), the worker is
+            # still ejected, and the next canary may go out
+            assert not workers[0].health.probing
+            assert not workers[0].health.healthy
+            await asyncio.sleep(0.06)
+            bomb.broken = False                  # the worker heals
+            await fleet.infer(imgs[2])           # the second canary
+            assert workers[0].health.healthy
+            return fleet.stats()
+
+    stats = asyncio.run(main())
+    assert stats["cancelled"] == 1
+    assert stats["workers"]["bad"]["probes"] == 2
+    assert stats["workers"]["bad"]["routable"]
+
+
+def test_fleet_submit_chunk_partial_admission(compiled_plan):
+    """A chunk admits as far as fleet capacity allows (spanning
+    workers), returns the refused remainder count, and an outage
+    (no admissible worker at all) still raises."""
+    _, compiled = compiled_plan
+    imgs = compiled.sample_images(6)
+
+    async def main():
+        workers = [FleetWorker("a", _gateway(compiled_plan,
+                                             max_pending=1), "v5e"),
+                   FleetWorker("b", _gateway(compiled_plan,
+                                             max_pending=1), "v5e")]
+        fleet = Fleet(workers, router="least_loaded")
+        async with fleet:
+            futs, refused = fleet.submit_chunk(imgs[:4])
+            assert len(futs) == 2 and refused == 2   # one per worker
+            outs = await asyncio.gather(*futs)
+            await fleet.drain("a")
+            await fleet.drain("b")
+            with pytest.raises(NoWorkerAvailable):
+                fleet.submit_chunk(imgs[4:])
+            return outs
+
+    outs = asyncio.run(main())
+    assert len(outs) == 2
+    for out, ref in zip(outs, _ref_outputs(compiled_plan, imgs[:2])):
+        np.testing.assert_array_equal(out, ref)
+
+
 def test_fleet_stats_surface(compiled_plan):
     workers = [FleetWorker("w0", _gateway(compiled_plan), "v5e")]
 
