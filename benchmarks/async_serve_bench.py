@@ -189,7 +189,7 @@ def run(json_path: str | Path = JSON_PATH, *,
     plan = deploy.plan_deployment(cfg, fitted_block_models(), target=0.8,
                                   on_infeasible="fallback")
     compiled = CompiledCNN.from_plan(plan, max_batch=MAX_BATCH)
-    imgs = compiled.sample_images(REQUESTS)
+    imgs = compiled.sample_inputs(REQUESTS)
     step_s = _measure_step_s(compiled, imgs)
     capacity = MAX_BATCH / step_s
     emit("async_serve/full_batch_step", step_s * 1e6,

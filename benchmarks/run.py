@@ -7,9 +7,9 @@ from __future__ import annotations
 def main() -> None:
     from benchmarks import (async_serve_bench, cnn_forward_bench,
                             cnn_serve_bench, deploy_bench, fleet_bench,
-                            model_dse_bench, roofline_bench, runtime_bench,
-                            table2_blocks, table3_corr, table4_models,
-                            table5_alloc)
+                            model_dse_bench, moe_serve_bench,
+                            roofline_bench, runtime_bench, table2_blocks,
+                            table3_corr, table4_models, table5_alloc)
     print("name,us_per_call,derived")
     table2_blocks.run()
     table3_corr.run()
@@ -20,6 +20,7 @@ def main() -> None:
     runtime_bench.run()        # also writes BENCH_runtime.json
     async_serve_bench.run()    # also writes BENCH_async_serve.json
     fleet_bench.run()          # also writes BENCH_fleet.json
+    moe_serve_bench.run()      # also writes BENCH_moe_serve.json
     deploy_bench.run()
     roofline_bench.run()
     model_dse_bench.run()

@@ -37,7 +37,7 @@ async def main():
           f"compiles (shares all {len(gw.exec_cache)} executables)")
 
     compiled = gw.plans["prod"].compiled
-    imgs = compiled.sample_images(24)
+    imgs = compiled.sample_inputs(24)
 
     async with gw:
         # normal traffic, split across the two plans

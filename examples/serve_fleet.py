@@ -43,7 +43,7 @@ async def main():
         f"{w.worker_id} (cost {w.profile.cost}×)" for w in workers))
 
     compiled = workers[1].gateway.plans["cnn"].compiled
-    imgs = compiled.sample_images(24)
+    imgs = compiled.sample_inputs(24)
     tiers = [t for t in DEFAULT_TIERS for _ in range(8)]
 
     async with fleet:

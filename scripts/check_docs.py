@@ -28,6 +28,7 @@ import sys
 import tempfile
 import time
 import traceback
+import types
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
@@ -55,29 +56,37 @@ def extract_snippets(text: str):
 def run_doc(path: Path, verbose: bool = False) -> tuple[int, int, int]:
     """Execute a document's python snippets; returns (ran, skipped,
     failed)."""
-    ns: dict = {"__name__": f"docs_check_{path.stem}"}
+    # a real registered module, not a bare dict: snippets that define
+    # dataclasses (or anything else that looks itself up through
+    # ``sys.modules[cls.__module__]``) then behave like normal files
+    mod = types.ModuleType(f"docs_check_{path.stem}")
+    sys.modules[mod.__name__] = mod
+    ns = mod.__dict__
     ran = skipped = failed = 0
     raw = path.read_text()
-    for info, line, src in extract_snippets(raw):
-        words = info.split()            # "python", "python no-check", ...
-        if not words or words[0] != "python":
-            continue
-        if "no-check" in words[1:]:
-            skipped += 1
-            continue
-        t0 = time.time()
-        try:
-            code = compile(src, f"{path}:{line}", "exec")
-            exec(code, ns)
-            ran += 1
-            if verbose:
-                print(f"    ok   {path.name}:{line} "
-                      f"({time.time() - t0:.1f}s)")
-        except Exception:
-            failed += 1
-            print(f"FAILED {path}:{line}")
-            traceback.print_exc()
-            break                       # later snippets depend on this one
+    try:
+        for info, line, src in extract_snippets(raw):
+            words = info.split()        # "python", "python no-check", ...
+            if not words or words[0] != "python":
+                continue
+            if "no-check" in words[1:]:
+                skipped += 1
+                continue
+            t0 = time.time()
+            try:
+                code = compile(src, f"{path}:{line}", "exec")
+                exec(code, ns)
+                ran += 1
+                if verbose:
+                    print(f"    ok   {path.name}:{line} "
+                          f"({time.time() - t0:.1f}s)")
+            except Exception:
+                failed += 1
+                print(f"FAILED {path}:{line}")
+                traceback.print_exc()
+                break                   # later snippets depend on this one
+    finally:
+        sys.modules.pop(mod.__name__, None)
     return ran, skipped, failed
 
 

@@ -73,7 +73,17 @@ class DeploymentError(RuntimeError):
 # Version of the serialized DeploymentPlan payload.  Bump whenever the
 # JSON field semantics change and regenerate tests/golden/plan_golden.json
 # (mirrors synth.SWEEP_SCHEMA_VERSION for the sweep cache).
-PLAN_SCHEMA_VERSION = 1
+#
+# v1 → v2: the CNN-only ``"cnn"`` key became a typed ``"workload"``
+# envelope ``{"kind": ..., "spec": ...}`` dispatched through the
+# ``repro.runtime.workloads`` registry.  v1 payloads still load — the
+# upgrade wraps the embedded CNN spec unchanged, pinned bit-identical
+# (same executable-cache keys, same ``plan_config``) by
+# tests/golden/plan_v1_golden.json.
+PLAN_SCHEMA_VERSION = 2
+
+# schema versions ``from_json`` accepts (older ones upgrade in place)
+_READABLE_SCHEMA_VERSIONS = (1, PLAN_SCHEMA_VERSION)
 
 
 @dataclass(frozen=True)
@@ -98,7 +108,12 @@ class DeploymentPlan:
     convs_per_step: float          # plane convolutions per kernel call
     feasible: bool = True
     quant_error: Optional[float] = None   # filled by quantization_error
-    cnn: Optional[CNNConfig] = None       # the planned network itself
+    cnn: Optional[CNNConfig] = None       # the planned network (CNN plans)
+    #: typed non-CNN workload spec (``runtime.workloads.WorkloadSpec``).
+    #: CNN plans keep using ``cnn`` (and leave this None) so v1-era
+    #: callers and the v1→v2 upgrade stay bit-identical; exactly one of
+    #: ``cnn``/``workload`` is set on a planner-produced plan.
+    workload: Optional[object] = None
 
     @property
     def max_usage_pct(self) -> float:
@@ -119,21 +134,20 @@ class DeploymentPlan:
 
     def to_json(self, *, indent: Optional[int] = 2) -> str:
         """Versioned JSON payload; ``from_json`` round-trips it exactly
-        (schema pinned by tests/golden/plan_golden.json)."""
-        cnn = None
-        if self.cnn is not None:
-            cnn = {
-                "img_h": int(self.cnn.img_h),
-                "img_w": int(self.cnn.img_w),
-                "layers": [{
-                    "in_channels": int(s.in_channels),
-                    "out_channels": int(s.out_channels),
-                    "data_bits": int(s.data_bits),
-                    "coeff_bits": int(s.coeff_bits),
-                    "shift": int(s.shift),
-                    "block": s.block,
-                } for s in self.cnn.layers],
-            }
+        (schema pinned by tests/golden/plan_golden.json).  The network
+        itself is a typed ``workload`` envelope: CNN plans wrap their
+        ``cnn`` config as kind ``"cnn"``, other workloads serialize
+        their registered ``WorkloadSpec``."""
+        # lazy: runtime.workloads imports this module (and importing it
+        # registers the built-in workload kinds)
+        from repro.runtime import workloads as _wl
+        workload = None
+        if self.workload is not None:
+            workload = {"kind": self.workload.kind,
+                        "spec": self.workload.to_payload()}
+        elif self.cnn is not None:
+            workload = {"kind": "cnn",
+                        "spec": _wl.CNNWorkloadSpec(self.cnn).to_payload()}
         payload = {
             "version": PLAN_SCHEMA_VERSION,
             "device": {
@@ -159,19 +173,27 @@ class DeploymentPlan:
             "feasible": bool(self.feasible),
             "quant_error": (None if self.quant_error is None
                             else float(self.quant_error)),
-            "cnn": cnn,
+            "workload": workload,
         }
         return json.dumps(payload, indent=indent, sort_keys=True)
 
     @classmethod
     def from_json(cls, text: str) -> "DeploymentPlan":
+        """Parse a versioned plan payload.  v2 is the native schema;
+        v1 payloads (the CNN-only era) upgrade in place — the embedded
+        ``"cnn"`` spec loads into ``plan.cnn`` exactly as it always
+        did, so executable-cache keys and ``plan_config`` output are
+        bit-identical across the bump (pinned by the v1 golden)."""
+        from repro.runtime import workloads as _wl
         payload = json.loads(text)
         version = payload.get("version")
-        if version != PLAN_SCHEMA_VERSION:
+        if version not in _READABLE_SCHEMA_VERSIONS:
             raise ValueError(
                 f"deployment plan schema version {version!r} != supported "
-                f"{PLAN_SCHEMA_VERSION} — re-plan with this repro version "
-                f"(plans are not migrated across schema bumps)")
+                f"{PLAN_SCHEMA_VERSION} (readable: "
+                f"{_READABLE_SCHEMA_VERSIONS}) — re-plan with this repro "
+                f"version (plans are not migrated across unknown schema "
+                f"bumps)")
         dev = payload["device"]
         device = DeviceProfile(
             name=dev["name"], budgets=dict(dev["budgets"]),
@@ -182,23 +204,24 @@ class DeploymentPlan:
             calls=int(a["calls"]), demand=dict(a["demand"]))
             for a in payload["layers"])
         cnn = None
-        if payload.get("cnn") is not None:
-            c = payload["cnn"]
-            cnn = CNNConfig(
-                layers=tuple(ConvLayerSpec(
-                    in_channels=int(s["in_channels"]),
-                    out_channels=int(s["out_channels"]),
-                    data_bits=int(s["data_bits"]),
-                    coeff_bits=int(s["coeff_bits"]),
-                    shift=int(s["shift"]), block=s["block"])
-                    for s in c["layers"]),
-                img_h=int(c["img_h"]), img_w=int(c["img_w"]))
+        workload = None
+        if version == 1:
+            if payload.get("cnn") is not None:
+                cnn = _wl.CNNWorkloadSpec.from_payload(payload["cnn"]).cnn
+        elif payload.get("workload") is not None:
+            w = payload["workload"]
+            spec = _wl.get_workload(w["kind"]).from_payload(w["spec"])
+            if w["kind"] == "cnn":
+                cnn = spec.cnn     # CNN plans keep the legacy field
+            else:
+                workload = spec
         return cls(device=device, target=payload["target"], layers=layers,
                    demand=dict(payload["demand"]),
                    usage_pct=dict(payload["usage_pct"]),
                    convs_per_step=payload["convs_per_step"],
                    feasible=payload["feasible"],
-                   quant_error=payload["quant_error"], cnn=cnn)
+                   quant_error=payload["quant_error"], cnn=cnn,
+                   workload=workload)
 
     def save(self, path: Union[str, Path]) -> Path:
         path = Path(path)
@@ -399,6 +422,11 @@ def plan_config(plan: DeploymentPlan,
     if cfg is None:
         cfg = plan.cnn
     if cfg is None:
+        if plan.workload is not None:
+            raise ValueError(
+                f"plan carries a {plan.workload.kind!r} workload, not a "
+                f"CNN — use runtime.workloads (e.g. moe_plan_spec / "
+                f"compile_plan) instead of plan_config")
         raise ValueError("plan carries no CNNConfig; pass cfg explicitly")
     specs = tuple(dataclasses.replace(spec, block=a.block,
                                       data_bits=a.data_bits,

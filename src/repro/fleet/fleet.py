@@ -421,6 +421,7 @@ class Fleet:
                 "profile": w.profile.name,
                 "cost": w.profile.cost,
                 "plans": sorted(w.plan_ids),
+                "workloads": sorted(w.workload_kinds),
                 "rate": w.rate,
                 "healthy": w.health.healthy,
                 "routable": w.health.routable(now),

@@ -120,7 +120,16 @@ class Router(ABC):
     @staticmethod
     def admissible(plan_id: str,
                    workers: Sequence[WorkerView]) -> List[WorkerView]:
-        """Workers that may legally receive a ``plan_id`` request."""
+        """Workers that may legally receive a ``plan_id`` request.
+
+        ``plan_ids`` is the mixed-workload placement seam: a plan id
+        stands for a full ``DeploymentPlan`` of *any* workload kind
+        (CNN, quantized MoE, ...), and a worker only advertises plans
+        its device profile could host — an MoE plan that exceeds an
+        edge part's budgets fails ``plan_moe_deployment`` before it
+        could ever be registered there.  Routing by plan id therefore
+        *is* plan-aware workload placement; no router needs to know
+        what kind of network hides behind the id."""
         return [w for w in workers
                 if w.accepting and plan_id in w.plan_ids]
 

@@ -93,13 +93,16 @@ class SimWorkerSpec:
 @dataclass(frozen=True)
 class Trace:
     """A seeded request trace: sorted arrival times, per-request tier
-    index, absolute deadline (+inf when none), and plan id."""
+    index, absolute deadline (+inf when none), and plan assignment
+    (``plan_ids[plan_idx[i]]``; ``plan_idx=None`` constant-folds every
+    request onto ``plan_ids[0]`` — the single-workload trace)."""
     arrivals: np.ndarray           # float64, sorted
     tier_idx: np.ndarray           # int8 index into tier_names
     deadlines: np.ndarray          # float64 absolute (inf = none)
     tier_names: Tuple[str, ...]
-    plan_ids: Tuple[str, ...]      # per-request (constant-folded)
+    plan_ids: Tuple[str, ...]      # distinct plan ids in the trace
     tiers: Dict[str, TierSpec]
+    plan_idx: Optional[np.ndarray] = None   # int8 index into plan_ids
 
     def __len__(self) -> int:
         return len(self.arrivals)
@@ -107,11 +110,18 @@ class Trace:
 
 def make_trace(n: int, rate: float, *,
                tiers: Dict[str, TierSpec] = DEFAULT_TIERS,
-               plan_id: str = "cnn", seed: int = 0) -> Trace:
+               plan_id: str = "cnn",
+               plan_mix: Optional[Dict[str, float]] = None,
+               seed: int = 0) -> Trace:
     """Seeded Poisson trace: exponential inter-arrivals at ``rate``
     requests/sec, tiers drawn at their configured shares, deadlines
-    stamped relative to each arrival.  Same (n, rate, tiers, seed) →
-    bit-identical trace."""
+    stamped relative to each arrival.  ``plan_mix`` (plan id → traffic
+    share, summing to 1) draws a per-request plan for mixed-workload
+    fleets — e.g. ``{"cnn": 0.7, "moe": 0.3}`` interleaves CNN and MoE
+    requests through the same routing; without it every request targets
+    ``plan_id`` and the rng stream is untouched, so pre-existing
+    single-plan traces stay bit-identical.  Same (n, rate, tiers, mix,
+    seed) → bit-identical trace."""
     if n < 1 or rate <= 0:
         raise ValueError(f"need n ≥ 1 and rate > 0 (got {n}, {rate})")
     shares = np.array([t.share for t in tiers.values()], dtype=np.float64)
@@ -124,9 +134,19 @@ def make_trace(n: int, rate: float, *,
     rel = np.array([math.inf if t.deadline_s is None else t.deadline_s
                     for t in tiers.values()])
     deadlines = arrivals + rel[tier_idx]
+    plan_ids: Tuple[str, ...] = (plan_id,)
+    plan_idx = None
+    if plan_mix is not None:
+        pshares = np.array(list(plan_mix.values()), dtype=np.float64)
+        if not math.isclose(float(pshares.sum()), 1.0, rel_tol=1e-9):
+            raise ValueError(f"plan_mix shares must sum to 1 (got "
+                             f"{float(pshares.sum()):.6f})")
+        plan_ids = tuple(plan_mix)
+        plan_idx = rng.choice(len(pshares), size=n,
+                              p=pshares).astype(np.int8)
     return Trace(arrivals=arrivals, tier_idx=tier_idx,
                  deadlines=deadlines, tier_names=tuple(tiers),
-                 plan_ids=(plan_id,) * 1, tiers=dict(tiers))
+                 plan_ids=plan_ids, tiers=dict(tiers), plan_idx=plan_idx)
 
 
 class _SimWorker:
@@ -136,7 +156,7 @@ class _SimWorker:
 
     __slots__ = ("spec", "profile", "per_image_s", "overhead_s", "view",
                  "queue", "busy", "served", "batches", "busy_s",
-                 "served_by_tier")
+                 "served_by_tier", "served_by_plan")
 
     def __init__(self, spec: SimWorkerSpec):
         self.spec = spec
@@ -157,6 +177,7 @@ class _SimWorker:
         self.batches = 0
         self.busy_s = 0.0
         self.served_by_tier: Dict[str, int] = {}
+        self.served_by_plan: Dict[str, int] = {}
 
     def service_s(self, n: int) -> float:
         return self.overhead_s + n * self.per_image_s
@@ -240,7 +261,10 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
     tier_idx = trace.tier_idx
     deadlines = trace.deadlines
     tier_names = trace.tier_names
-    plan_id = trace.plan_ids[0]
+    plan_names = trace.plan_ids
+    # per-request plan index (constant 0 for single-workload traces)
+    plan_arr = (np.zeros(n, dtype=np.int8) if trace.plan_idx is None
+                else trace.plan_idx)
     tier_prio = np.array([TIER_PRIORITY[t] for t in tier_names])
 
     lat = np.full(n, np.nan)
@@ -264,10 +288,21 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         nonlocal eseq
         if w.busy or not w.queue:
             return
+        # single-plan batches, most-urgent plan wins — the gateway's
+        # dispatch rule: the EDF head picks the plan, the batch fills
+        # with that plan's requests in EDF order (other plans' requests
+        # keep their queue position for the next dispatch)
         batch = []
+        head_plan = plan_arr[w.queue[0][2]]
+        skipped = []
         while w.queue and len(batch) < w.spec.max_batch:
-            _, _, req = heapq.heappop(w.queue)
-            batch.append(req)
+            entry = heapq.heappop(w.queue)
+            if plan_arr[entry[2]] == head_plan:
+                batch.append(entry[2])
+            else:
+                skipped.append(entry)
+        for entry in skipped:
+            heapq.heappush(w.queue, entry)
         w.view.queue_depth -= len(batch)
         w.view.inflight = len(batch)
         w.sync_wait()
@@ -278,7 +313,8 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         eseq += 1
 
     def route(req: int, now: float, seq: int) -> bool:
-        view = rtr.select(plan_id, tier_names[tier_idx[req]], views, now,
+        view = rtr.select(plan_names[plan_arr[req]],
+                          tier_names[tier_idx[req]], views, now,
                           deadline=(None if math.isinf(deadlines[req])
                                     else float(deadlines[req])))
         if view is None:
@@ -327,6 +363,8 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
                 lat[req] = now - arrivals[req]
                 name = tier_names[tier_idx[req]]
                 w.served_by_tier[name] = w.served_by_tier.get(name, 0) + 1
+                pname = plan_names[plan_arr[req]]
+                w.served_by_plan[pname] = w.served_by_plan.get(pname, 0) + 1
             w.served += len(batch)
             start_batch(w, now)
         else:
@@ -371,6 +409,8 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
             "images_per_batch": w.served / max(w.batches, 1),
             "utilization": w.busy_s / max(duration, 1e-9),
             "served_by_tier": dict(sorted(w.served_by_tier.items())),
+            "served_by_plan": dict(sorted(w.served_by_plan.items())),
+            "plan_ids": list(w.spec.plan_ids),
             "drained": w.view.draining,
         }
     return SimResult(

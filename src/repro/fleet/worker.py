@@ -73,6 +73,20 @@ class FleetWorker:
         """Plans this worker can serve (live view of its registry)."""
         return frozenset(self.gateway.plans)
 
+    @property
+    def workload_kinds(self):
+        """The workload kinds behind this worker's plans (``{"cnn"}``,
+        ``{"moe"}``, or both on a mixed worker).  Placement by plan id
+        subsumes placement by kind — a worker only lists a plan it
+        could register, and registering an MoE plan on an edge-profile
+        worker fails at planning time — but the kinds make mixed-fleet
+        telemetry and capacity audits legible."""
+        kinds = set()
+        for entry in self.gateway.plans.values():
+            compiled = getattr(entry, "compiled", entry)
+            kinds.add(getattr(compiled, "kind", "cnn"))
+        return frozenset(kinds)
+
     def view(self, now: Optional[float] = None, *,
              clock: Callable[[], float] = time.monotonic) -> WorkerView:
         """The router's one-snapshot projection of this worker.  A

@@ -36,6 +36,16 @@ placed by a pluggable router, optional mid-trace graceful drain:
 
   PYTHONPATH=src python -m repro.launch.serve --workload cnn --fleet \
       --requests 96 --occupancy 1.5 [--router plan_aware] [--drain]
+
+MoE workload — the same plan→compile→serve stack, different backend:
+``plan_moe_deployment`` picks per-layer (data_bits, coeff_bits) for the
+quantized expert FFNs, ``compile_plan`` builds the bucketed AOT
+``CompiledMoE``, and the identical engines serve token blocks instead
+of images:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload moe \
+      --requests 32 --max-batch 8 [--device v5e] [--arch qwen3-moe-30b-a3b] \
+      [--save-plan moe_plan.json] [--async --occupancy 2.0]
 """
 
 from __future__ import annotations
@@ -104,6 +114,129 @@ def _cnn_plan(args):
     return plan
 
 
+def _moe_plan(args):
+    """Load or plan the quantized-MoE deployment the MoE workload
+    serves.  ``--arch`` (a zoo MoE config, shrunk via ``smoke_config``)
+    seeds the workload spec; ``--plan``/``--save-plan`` round-trip the
+    v2 plan artifact exactly like the CNN path."""
+    from repro import runtime
+    from repro.configs import smoke_config
+    from repro.runtime import moe_workload_from_config, plan_moe_deployment
+
+    if args.plan:
+        plan = runtime.load_plan(args.plan)
+        print(f"[serve] loaded plan artifact {args.plan!r} "
+              f"(planned for device {plan.device.name}, "
+              f"workload {plan.workload.kind!r})")
+    else:
+        spec = moe_workload_from_config(smoke_config(args.arch))
+        plan = plan_moe_deployment(spec, args.device, target=0.8,
+                                   on_infeasible="fallback")
+    if args.save_plan:
+        runtime.save_plan(plan, args.save_plan)
+        print(f"[serve] plan artifact saved to {args.save_plan!r}")
+    print(f"[serve] plan for {plan.device.name}: "
+          + ", ".join(f"L{a.index}={a.block}@d{a.data_bits}/c{a.coeff_bits}"
+                      for a in plan.layers)
+          + f"  (quant rel-err {plan.quant_error:.4f})")
+    return plan
+
+
+def run_moe(args) -> None:
+    """Quantized-MoE serving through the *same* engine as the CNN path:
+    ``CNNEngine.from_plan`` dispatches on the plan's workload kind, so
+    the tick loop, bucketing, and stats below are untouched code."""
+    from repro.serve import CNNEngine, CNNServeConfig, ImageRequest
+
+    plan = _moe_plan(args)
+    t0 = time.time()
+    engine = CNNEngine.from_plan(
+        plan, serve_cfg=CNNServeConfig(max_batch=args.max_batch))
+    compiled = engine.compiled
+    print(f"[serve] AOT warmup: {len(compiled.buckets)} buckets × "
+          f"{compiled.num_layers} MoE layers compiled in "
+          f"{time.time() - t0:.2f}s (off the serving critical path)")
+
+    reqs = [ImageRequest(image=x, request_id=i) for i, x in
+            enumerate(compiled.sample_inputs(args.requests))]
+    t0 = time.time()
+    engine.run(reqs)
+    dt = time.time() - t0
+    stats = engine.stats()
+    seq_len = compiled.in_shape[0]
+    print(f"[serve] {len(reqs)} token blocks ({len(reqs) * seq_len} "
+          f"tokens) in {dt:.2f}s ({len(reqs) * seq_len / dt:.0f} tok/s, "
+          f"{stats['images_per_step']:.1f} blocks/step)")
+    print(f"[serve] occupancy histogram: {stats['occupancy_hist']}  "
+          f"bucket hits: {stats['bucket_hits']}")
+
+
+def run_moe_async(args) -> None:
+    """The async gateway serving MoE token blocks — identical driver to
+    ``run_cnn_async`` because the gateway is plan-type-blind."""
+    from repro.serve import (AsyncCNNGateway, AsyncServeConfig,
+                            DeadlineExpired, GatewayBacklog)
+
+    plan = _moe_plan(args)
+    t0 = time.time()
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=args.max_batch,
+                               max_pending=args.max_pending,
+                               max_inflight=args.max_inflight),
+        plan_id="moe")
+    compiled = gw.plans["moe"].compiled
+    print(f"[serve] AOT warmup: {len(compiled.buckets)} buckets × "
+          f"{compiled.num_layers} MoE layers in {time.time() - t0:.2f}s")
+
+    blocks = compiled.sample_inputs(args.requests)
+    xb = np.stack([np.asarray(b, compiled.in_dtype)
+                   for b in blocks[:args.max_batch]])
+    compiled(xb)                                   # touch
+    t0 = time.perf_counter()
+    jax.block_until_ready(compiled(xb))
+    step_s = time.perf_counter() - t0
+    rate = args.occupancy * args.max_batch / step_s
+    print(f"[serve] full-batch step {step_s * 1e3:.2f}ms → offered load "
+          f"{rate:.0f} blocks/s (occupancy {args.occupancy:g})")
+
+    deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
+    rng = np.random.default_rng(1)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, args.requests))
+
+    async def drive():
+        latencies, shed = [], 0
+        async with gw:
+            t_start = time.monotonic()
+
+            async def one(i, at):
+                nonlocal shed
+                await asyncio.sleep(max(0.0, at - (time.monotonic()
+                                                   - t_start)))
+                t_sub = time.monotonic()
+                try:
+                    fut = gw.submit_nowait(blocks[i], deadline=deadline)
+                    await fut
+                    latencies.append(time.monotonic() - t_sub)
+                except GatewayBacklog:
+                    shed += 1
+                except DeadlineExpired:
+                    pass
+            await asyncio.gather(*(one(i, a)
+                                   for i, a in enumerate(arrivals)))
+            return latencies, shed, time.monotonic() - t_start
+
+    latencies, shed, wall = asyncio.run(drive())
+    stats = gw.stats()
+    pct = _percentiles(latencies) if latencies else {}
+    seq_len = compiled.in_shape[0]
+    print(f"[serve] {stats['served']} served / {shed} shed / "
+          f"{stats['expired']} expired of {args.requests} in {wall:.2f}s "
+          f"({stats['served'] * seq_len / wall:.0f} tok/s)")
+    if pct:
+        print(f"[serve] latency p50={pct['p50_ms']:.1f}ms "
+              f"p95={pct['p95_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms")
+
+
 def run_cnn(args) -> None:
     from repro.parallel.sharding import cnn_data_mesh
     from repro.serve import CNNEngine, CNNServeConfig, ImageRequest
@@ -119,7 +252,7 @@ def run_cnn(args) -> None:
           f"{time.time() - t0:.2f}s (off the serving critical path)")
 
     reqs = [ImageRequest(image=img, request_id=i) for i, img in
-            enumerate(engine.compiled.sample_images(args.requests))]
+            enumerate(engine.compiled.sample_inputs(args.requests))]
     t0 = time.time()
     engine.run(reqs)
     dt = time.time() - t0
@@ -160,7 +293,7 @@ def run_cnn_async(args) -> None:
           f"{time.time() - t0:.2f}s (shared exec cache: "
           f"{len(gw.exec_cache)} executables)")
 
-    imgs = compiled.sample_images(args.requests)
+    imgs = compiled.sample_inputs(args.requests)
     # service capacity: one timed full-batch dispatch → arrival rate
     xb = np.stack([np.asarray(i, compiled.in_dtype)
                    for i in imgs[:args.max_batch]])
@@ -251,7 +384,7 @@ def run_cnn_fleet(args) -> None:
           f" AOT-warmed in {time.time() - t0:.2f}s")
 
     compiled = workers[1].gateway.plans["cnn"].compiled
-    imgs = compiled.sample_images(args.requests)
+    imgs = compiled.sample_inputs(args.requests)
     xb = np.stack([np.asarray(i, compiled.in_dtype)
                    for i in imgs[:args.max_batch]])
     compiled(xb)                                   # touch
@@ -326,8 +459,12 @@ def run_cnn_fleet(args) -> None:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("lm", "cnn"), default="lm")
-    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--workload", choices=("lm", "cnn", "moe"),
+                    default="lm")
+    ap.add_argument("--arch", default=None,
+                    help="zoo architecture (lm: any; moe: one with MoE "
+                         "blocks; default llama3.2-3b / "
+                         "qwen3-moe-30b-a3b)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
@@ -374,6 +511,9 @@ def main():
     ap.add_argument("--seed", type=int, default=1,
                     help="rng seed for generated traffic (cnn --fleet)")
     args = ap.parse_args()
+    if args.arch is None:
+        args.arch = ("qwen3-moe-30b-a3b" if args.workload == "moe"
+                     else "llama3.2-3b")
     if args.workload == "cnn":
         if args.fleet:
             run_cnn_fleet(args)
@@ -381,6 +521,8 @@ def main():
             run_cnn_async(args)
         else:
             run_cnn(args)
+    elif args.workload == "moe":
+        run_moe_async(args) if args.async_ else run_moe(args)
     else:
         run_lm(args)
 

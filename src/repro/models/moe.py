@@ -43,6 +43,26 @@ def init_moe(key, cfg):
     return p
 
 
+def quantize_moe_params(p, coeff_bits: int):
+    """Fake-quantize the expert/shared FFN weights onto the symmetric
+    ``coeff_bits``-bit fixed-point grid (per-tensor scale, mirroring
+    ``ops.quantize_fixed``'s range): each tensor is scaled so its max
+    magnitude maps to ``2^(c-1) - 1``, rounded, and scaled back — the
+    values a ``coeff_bits``-wide container deployment would compute
+    with, kept in float for the TPU matmuls.  The router projection is
+    left exact: expert *choice* is control flow, and mis-rounding it
+    swaps which experts run instead of adding bounded rounding noise
+    (the serving planner quantizes compute, not routing).
+    """
+    hi = float((1 << (coeff_bits - 1)) - 1)
+
+    def q(w):
+        s = hi / jnp.maximum(jnp.max(jnp.abs(w)), 1e-9)
+        return (jnp.round(w * s) / s).astype(w.dtype)
+
+    return {k: (v if k == "router" else q(v)) for k, v in p.items()}
+
+
 def _top_k(logits, k):
     vals, ids = jax.lax.top_k(logits, k)
     return vals, ids

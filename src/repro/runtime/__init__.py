@@ -2,33 +2,51 @@
 
 The paper's point is that parameterizable blocks plus fitted resource
 models let you *pick a configuration once and deploy it without
-re-running the search*.  This package is that workflow as one API:
+re-running the search*.  This package is that workflow as one API,
+generalized across workloads (schema v2):
 
-  plan     ``deploy.plan_deployment`` → a ``DeploymentPlan`` that is a
-           durable, versioned JSON artifact (``save_plan``/``load_plan``
-           — plan on one machine, serve on another)
-  compile  ``CompiledCNN`` — AOT batch-bucketed executables for the
-           planned network (no first-request compile stall, no
+  plan     ``deploy.plan_deployment`` (CNN) and
+           ``workloads.plan_moe_deployment`` (quantized MoE) → a
+           ``DeploymentPlan`` that is a durable, versioned JSON
+           artifact (``save_plan``/``load_plan`` — plan on one machine,
+           serve on another) carrying a typed ``WorkloadSpec``
+  compile  ``compile_plan(plan)`` → the plan's ``CompiledModel``
+           backend (``CompiledCNN``, ``CompiledMoE``, or any kind in
+           the ``workloads`` registry) — AOT batch-bucketed
+           executables (no first-request compile stall, no
            fixed-max_batch padding waste)
-  serve    ``repro.serve.CNNEngine`` — the dynamic-batching engine,
-           built on ``CompiledCNN`` — and ``repro.serve.
-           AsyncCNNGateway``, the continuous-batching front door that
-           routes *multiple* plans through one shared
-           ``ExecutableCache`` (identical layers compile once across
-           plans)
+  serve    ``repro.serve.CNNEngine`` — the dynamic-batching engine —
+           and ``repro.serve.AsyncCNNGateway``, the continuous-batching
+           front door that routes *multiple* plans of *any* workload
+           kind through one shared ``ExecutableCache`` (identical
+           layers compile once across plans)
 
 Re-exports the plan types so callers need only ``repro.runtime`` and
-``repro.serve``.
+``repro.serve``.  Importing this package registers the built-in
+workload kinds (``"cnn"``, ``"moe"``).
 """
 
 from repro.core.deploy import (DeploymentError, DeploymentPlan,
                                PLAN_SCHEMA_VERSION, plan_deployment)
-from repro.runtime.compiled import (CompiledCNN, DispatchAborted,
-                                    ExecutableCache, bucket_ladder)
+from repro.runtime.compiled import (CompiledCNN, CompiledModel,
+                                    DispatchAborted, ExecutableCache,
+                                    bucket_ladder, validate_container_input)
 from repro.runtime.plan_io import load_plan, save_plan
+from repro.runtime.workloads import (CNNWorkloadSpec, CompiledMoE,
+                                     MoELayerSpec, MoEWorkloadSpec,
+                                     WorkloadSpec, compile_plan,
+                                     get_workload, list_workloads,
+                                     moe_workload_from_config,
+                                     plan_moe_deployment, register_workload,
+                                     validate_moe_plan, workload_spec)
 
 __all__ = [
-    "CompiledCNN", "DeploymentError", "DeploymentPlan", "DispatchAborted",
-    "ExecutableCache", "PLAN_SCHEMA_VERSION", "bucket_ladder", "load_plan",
-    "plan_deployment", "save_plan",
+    "CNNWorkloadSpec", "CompiledCNN", "CompiledMoE", "CompiledModel",
+    "DeploymentError", "DeploymentPlan", "DispatchAborted",
+    "ExecutableCache", "MoELayerSpec", "MoEWorkloadSpec",
+    "PLAN_SCHEMA_VERSION", "WorkloadSpec", "bucket_ladder", "compile_plan",
+    "get_workload", "list_workloads", "load_plan",
+    "moe_workload_from_config", "plan_deployment", "plan_moe_deployment",
+    "register_workload", "save_plan", "validate_container_input",
+    "validate_moe_plan", "workload_spec",
 ]

@@ -1,22 +1,31 @@
-"""``CompiledCNN``: AOT batch-bucketed executables for a planned CNN.
+"""``CompiledModel``: AOT batch-bucketed executables for any planned
+workload — with ``CompiledCNN`` as the convolution backend.
 
 The serving hot path used to pay two avoidable costs:
 
 * **first-request compile stalls** — ``jax.jit`` traces and compiles on
   the first call, inside the serving critical path;
 * **fixed-batch padding waste** — the engine always ran the full
-  ``(max_batch, H, W, C)`` tensor, so a single live image paid for
+  ``(max_batch, ...)`` tensor, so a single live request paid for
   ``max_batch`` (16× the arithmetic at occupancy 1).
 
-``CompiledCNN`` removes both.  At construction (or an explicit
-``warmup()``) it AOT-compiles each layer via
-``jax.jit(...).lower(...).compile()`` across a **bucket ladder** of
+``CompiledModel`` removes both, for *every* registered workload.  At
+construction (or an explicit ``warmup()``) it AOT-compiles each layer
+via ``jax.jit(...).lower(...).compile()`` across a **bucket ladder** of
 power-of-two batch sizes (1, 2, 4, …, max_batch), caching executables
-keyed on ``(layer spec, bucket)`` — two layers with identical
-(block, bits, geometry) share one executable per bucket.  A call then
-dispatches to the *smallest bucket ≥ the live batch*: occupancy 1 runs
-the size-1 executable, occupancy 5 pads to 8, and a full pool still
-runs max_batch — every shape pre-compiled, zero traces at serve time.
+keyed on ``(layer spec, bucket)`` — two layers with identical spec
+share one executable per bucket.  A call then dispatches to the
+*smallest bucket ≥ the live batch*: occupancy 1 runs the size-1
+executable, occupancy 5 pads to 8, and a full pool still runs
+max_batch — every shape pre-compiled, zero traces at serve time.
+
+Subclasses supply the workload: the layer count, the per-layer compile
+key/function/params, the input contract (``in_shape``/``in_dtype`` +
+``validate_input``) and the canonical request generator
+(``sample_inputs``).  ``CompiledCNN`` is the convolution backend;
+``repro.runtime.workloads.CompiledMoE`` is the quantized
+mixture-of-experts backend, and ``repro.runtime.workloads.compile_plan``
+dispatches a ``DeploymentPlan`` of any registered kind to its backend.
 
 Construction is plan-first: ``CompiledCNN.from_plan`` consumes a
 ``deploy.DeploymentPlan`` (including one loaded from JSON on a machine
@@ -30,18 +39,20 @@ constrains its batch to ``sharding.cnn_batch_sharding`` (batch over the
 data axes when divisible, replicated otherwise).
 
 Multi-plan serving: executables live in an ``ExecutableCache`` — pass
-one cache to several ``CompiledCNN`` instances (the async gateway does)
-and plans whose layer specs coincide share compiles instead of paying
-per plan.  Dispatch is cancellation-safe: ``__call__(x, should_abort=
-...)`` polls the callback between layers and raises ``DispatchAborted``
-instead of finishing work nobody is waiting for, and all telemetry
-counters are lock-protected so ``stats()`` snapshots are consistent
-under the async drain thread.
+one cache to several ``CompiledModel`` instances (the async gateway
+does) and plans whose layer specs coincide share compiles instead of
+paying per plan; CNN and MoE plans coexist in one cache because every
+key leads with the workload-specific identity.  Dispatch is
+cancellation-safe: ``__call__(x, should_abort=...)`` polls the callback
+between layers and raises ``DispatchAborted`` instead of finishing work
+nobody is waiting for, and all telemetry counters are lock-protected so
+``stats()`` snapshots are consistent under the async drain thread.
 """
 
 from __future__ import annotations
 
 import threading
+import warnings
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -56,19 +67,21 @@ from repro.kernels import conv2d
 class DispatchAborted(RuntimeError):
     """A bucketed dispatch was abandoned mid-flight: every request it
     was serving has been cancelled, so finishing the remaining layers
-    would be pure waste.  Raised by ``CompiledCNN.__call__`` when its
+    would be pure waste.  Raised by ``CompiledModel.__call__`` when its
     ``should_abort`` callback returns True between layers."""
 
 
 class ExecutableCache:
     """Shareable ``(layer spec, bucket) → compiled executable`` map.
 
-    ``CompiledCNN`` keys executables on the full layer identity —
-    (block, bits, shift, channels, geometry, mesh, bucket) — so the
+    Backends key executables on the full layer identity — for a CNN
+    layer (block, bits, shift, channels, geometry, mesh, bucket); for an
+    MoE layer (kind, expert geometry, bits, mesh, bucket) — so the
     cache is content-addressed: two *plans* whose layers coincide can
     safely share one cache and every coinciding (layer, bucket) pair
-    compiles exactly once.  The async gateway routes every registered
-    plan through one ``ExecutableCache`` for exactly this reason.
+    compiles exactly once, even across workload kinds.  The async
+    gateway routes every registered plan through one ``ExecutableCache``
+    for exactly this reason.
 
     Thread-safe: lookups/inserts take a lock; compilation itself runs
     outside it (two racing threads may both compile the same key — the
@@ -124,20 +137,66 @@ def bucket_ladder(max_batch: int) -> Tuple[int, ...]:
     return tuple(rungs)
 
 
-class CompiledCNN:
-    """AOT-compiled, batch-bucketed executor for one CNN deployment."""
-
-    def __init__(self, cfg: CNNConfig, params, blocks: Sequence[BlockLike],
-                 *, max_batch: int = 16, mesh=None, warmup: bool = True,
-                 exec_cache: Optional[ExecutableCache] = None):
-        blocks = [get_block(b) for b in blocks]
-        if len(blocks) != len(cfg.layers):
+def validate_container_input(x, in_shape, in_dtype, request_id=0, *,
+                             noun: str = "input") -> np.ndarray:
+    """Shape + dtype admission check for integer-container workloads
+    (the CNN input contract).  A float array must carry exact
+    container-range integers — silent ``np.asarray(x, in_dtype)``
+    truncation (0.9 → 0, 200.0 → -56 for int8) is a ``ValueError``
+    here, as is any value that would wrap in the container."""
+    x = np.asarray(x)
+    if tuple(x.shape) != tuple(in_shape):
+        raise ValueError(
+            f"request {request_id}: {noun} shape {tuple(x.shape)} "
+            f"!= engine input {tuple(in_shape)}")
+    if not np.issubdtype(x.dtype, np.integer):
+        if not np.all(np.isfinite(x)) or np.any(x != np.round(x)):
             raise ValueError(
-                f"need one block per layer: {len(blocks)} blocks "
-                f"for {len(cfg.layers)} layers")
-        self.cfg = cfg
-        self.params = params
-        self.blocks = blocks
+                f"request {request_id}: {noun} dtype {x.dtype} "
+                f"carries non-integral values — quantize explicitly "
+                f"(e.g. ops.quantize_fixed) before submitting")
+    info = np.iinfo(in_dtype)
+    if np.any(x < info.min) or np.any(x > info.max):
+        raise ValueError(
+            f"request {request_id}: {noun} values outside the "
+            f"{np.dtype(in_dtype).name} container range "
+            f"[{info.min}, {info.max}] — would wrap, not clamp")
+    return x
+
+
+class CompiledModel:
+    """AOT-compiled, batch-bucketed executor for one planned workload.
+
+    The generic machinery — bucket ladder, ``ExecutableCache``, AOT
+    warmup, smallest-bucket dispatch with padding, chunking above
+    ``max_batch``, between-layer ``should_abort`` polling, telemetry —
+    lives here.  A backend subclass supplies:
+
+    ``num_layers``            how many sequential executables a forward is
+    ``in_shape``/``in_dtype`` the per-request input contract
+    ``input_noun``            what a request payload is called in errors
+    ``_layer_key(i, bucket)`` the full-identity cache key (incl. mesh)
+    ``_layer_fn(i)``          ``(params, x) -> y`` traced per bucket
+    ``_layer_params(i)``      the pytree passed as ``params``
+    ``_layer_in_sds(i, b)``   the ShapeDtypeStruct the layer is lowered at
+    ``_empty_output()``       the zero-batch result
+    ``_place_batch(xb, b)``   optional device placement (mesh sharding)
+    ``sample_inputs(k)``      canonical request generator
+    ``validate_input(x)``     per-workload admission check
+    """
+
+    kind = "model"                 # registry name of the workload
+    input_noun = "input"           # request payload, as named in errors
+
+    # subclass contract: these must be set before delegating to
+    # ``CompiledModel.__init__`` (warmup compiles through them)
+    num_layers: int
+    in_shape: Tuple[int, ...]
+    in_dtype = None
+
+    def __init__(self, *, max_batch: int = 16, mesh=None,
+                 warmup: bool = True,
+                 exec_cache: Optional[ExecutableCache] = None):
         self.max_batch = max_batch
         self.buckets = bucket_ladder(max_batch)
         self.mesh = mesh
@@ -146,10 +205,6 @@ class CompiledCNN:
         # devices + axis names) — not id(), whose recycled addresses
         # could alias two different meshes in a long-lived shared cache
         self._mesh_token = mesh
-
-        spec0 = cfg.layers[0]
-        self.in_shape = (cfg.img_h, cfg.img_w, spec0.in_channels)
-        self.in_dtype = conv2d.container_dtype(spec0.data_bits)
 
         # (layer key, bucket) → compiled executable; identical layer
         # specs share one compile per bucket — across *instances* too
@@ -162,6 +217,184 @@ class CompiledCNN:
         self._stats_lock = threading.Lock()
         if warmup:
             self.warmup()
+
+    # -- backend hooks ----------------------------------------------------
+    def _layer_key(self, i: int, bucket: int) -> tuple:
+        raise NotImplementedError
+
+    def _layer_fn(self, i: int):
+        """The traceable ``(params, x) -> y`` for layer ``i``."""
+        raise NotImplementedError
+
+    def _layer_params(self, i: int):
+        raise NotImplementedError
+
+    def _layer_in_sds(self, i: int, bucket: int) -> jax.ShapeDtypeStruct:
+        raise NotImplementedError
+
+    def _empty_output(self):
+        raise NotImplementedError
+
+    def _place_batch(self, xb, bucket: int):
+        """Optional pre-dispatch device placement (mesh sharding)."""
+        return xb
+
+    def sample_inputs(self, k: int, seed: int = 0):
+        """``k`` random requests matching this executor's input contract
+        (shape + dtype) — the canonical workload generator shared by the
+        launcher, benchmarks, and examples, so the input rules live in
+        one place."""
+        raise NotImplementedError
+
+    def validate_input(self, x, request_id: int = 0) -> np.ndarray:
+        """Admission check: shape + dtype-compatibility.  Backends
+        override to enforce their quantization contract (the CNN
+        backend rejects non-integral floats and container overflow; the
+        MoE backend rejects non-finite activations)."""
+        x = np.asarray(x)
+        if tuple(x.shape) != tuple(self.in_shape):
+            raise ValueError(
+                f"request {request_id}: {self.input_noun} shape "
+                f"{tuple(x.shape)} != engine input {tuple(self.in_shape)}")
+        return x
+
+    # -- AOT compilation --------------------------------------------------
+    def _compile_layer(self, i: int, bucket: int):
+        def build():
+            fn = self._layer_fn(i)
+            w_sds = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                self._layer_params(i))
+            x_sds = self._layer_in_sds(i, bucket)
+            with self._stats_lock:
+                self.compiles += 1
+            return jax.jit(fn).lower(w_sds, x_sds).compile()
+
+        return self.cache.get_or_build(self._layer_key(i, bucket), build)
+
+    def warmup(self) -> "CompiledModel":
+        """AOT-compile every (layer, bucket) executable now, so no call
+        ever compiles on the serving critical path."""
+        for b in self.buckets:
+            for i in range(self.num_layers):
+                self._compile_layer(i, b)
+        return self
+
+    @property
+    def warmed_up(self) -> bool:
+        return all(self._layer_key(i, b) in self.cache
+                   for b in self.buckets
+                   for i in range(self.num_layers))
+
+    # -- dispatch ----------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket ≥ n (n must be ≤ max_batch)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"batch {n} exceeds max_batch={self.max_batch}")
+
+    def _run_bucket(self, xb, should_abort=None):
+        """xb: (n, *in_shape) with n ≤ max_batch → (n, *out_shape)."""
+        n = xb.shape[0]
+        bucket = self.bucket_for(n)
+        if n < bucket:
+            pad = jnp.zeros((bucket - n,) + xb.shape[1:], xb.dtype)
+            xb = jnp.concatenate([xb, pad])
+        xb = self._place_batch(xb, bucket)
+        act = xb
+        for i in range(self.num_layers):
+            if should_abort is not None and should_abort():
+                raise DispatchAborted(
+                    f"dispatch abandoned before layer {i} "
+                    f"(all served requests cancelled)")
+            act = self._compile_layer(i, bucket)(
+                self._layer_params(i), act)
+        with self._stats_lock:
+            self.bucket_hits[bucket] += 1
+        return act[:n]
+
+    def __call__(self, x, *, should_abort=None):
+        """x: one ``in_shape`` request or an ``(N, *in_shape)`` batch.
+        Batches larger than ``max_batch`` run in max_batch-sized chunks
+        (the tail dispatching to its own bucket).
+
+        ``should_abort`` (optional zero-arg callable) is polled between
+        layers; returning True raises ``DispatchAborted`` — the async
+        gateway's cancellation hook, so a flight whose every request was
+        cancelled mid-execution stops paying for the remaining layers."""
+        x = jnp.asarray(x)
+        single = x.ndim == len(self.in_shape)
+        if single:
+            x = x[None]
+        if x.shape[1:] != tuple(self.in_shape):
+            raise ValueError(
+                f"{self.input_noun} shape {tuple(x.shape[1:])} != "
+                f"compiled input {tuple(self.in_shape)}")
+        if x.dtype != self.in_dtype:
+            raise ValueError(
+                f"{self.input_noun} dtype {x.dtype} != compiled input "
+                f"{np.dtype(self.in_dtype).name}")
+        with self._stats_lock:
+            self.calls += 1
+        if x.shape[0] == 0:            # empty queue tick: nothing to run
+            return self._empty_output()
+        outs = [self._run_bucket(x[s:s + self.max_batch], should_abort)
+                for s in range(0, x.shape[0], self.max_batch)]
+        y = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        return y[0] if single else y
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> dict:
+        """Dispatch + compile telemetry.  ``executables``/``cache_*``
+        describe the (possibly shared) ``ExecutableCache``; ``compiles``
+        counts builds *this instance* performed — with a shared cache,
+        a second plan over identical layers reports 0.  Snapshot is
+        lock-consistent under the async drain."""
+        with self._stats_lock:
+            hits = dict(self.bucket_hits)
+            calls = self.calls
+            compiles = self.compiles
+        cache = self.cache.stats()
+        return {
+            "kind": self.kind,
+            "buckets": list(self.buckets),
+            "bucket_hits": hits,
+            "executables": cache["executables"],
+            "compiles": compiles,
+            "cache_compiles": cache["compiles"],
+            "cache_hits": cache["hits"],
+            "calls": calls,
+            "warmed_up": self.warmed_up,
+        }
+
+
+class CompiledCNN(CompiledModel):
+    """The convolution backend: AOT-compiled, batch-bucketed executor
+    for one planned CNN deployment.  Bit-exact vs ``cnn_forward_ref``
+    at every batch size."""
+
+    kind = "cnn"
+    input_noun = "image"
+
+    def __init__(self, cfg: CNNConfig, params, blocks: Sequence[BlockLike],
+                 *, max_batch: int = 16, mesh=None, warmup: bool = True,
+                 exec_cache: Optional[ExecutableCache] = None):
+        blocks = [get_block(b) for b in blocks]
+        if len(blocks) != len(cfg.layers):
+            raise ValueError(
+                f"need one block per layer: {len(blocks)} blocks "
+                f"for {len(cfg.layers)} layers")
+        self.cfg = cfg
+        self.params = params
+        self.blocks = blocks
+        self.num_layers = len(cfg.layers)
+
+        spec0 = cfg.layers[0]
+        self.in_shape = (cfg.img_h, cfg.img_w, spec0.in_channels)
+        self.in_dtype = conv2d.container_dtype(spec0.data_bits)
+        super().__init__(max_batch=max_batch, mesh=mesh, warmup=warmup,
+                         exec_cache=exec_cache)
 
     # -- construction from a deployment plan -----------------------------
     @classmethod
@@ -189,120 +422,52 @@ class CompiledCNN:
         from repro.core import deploy
         return cls.from_plan(deploy.DeploymentPlan.from_json(text), **kw)
 
-    # -- AOT compilation --------------------------------------------------
+    # -- backend hooks ----------------------------------------------------
     def _layer_key(self, i: int, bucket: int) -> tuple:
         spec = self.cfg.layers[i]
         return (self.blocks[i].name, spec.data_bits, spec.coeff_bits,
                 spec.shift, spec.in_channels, spec.out_channels,
                 self.cfg.img_h, self.cfg.img_w, self._mesh_token, bucket)
 
-    def _compile_layer(self, i: int, bucket: int):
+    def _layer_fn(self, i: int):
         spec, blk, mesh = self.cfg.layers[i], self.blocks[i], self.mesh
 
-        def build():
-            def layer(w, x):
-                if mesh is not None:
-                    from repro.parallel.sharding import cnn_batch_sharding
-                    sh = cnn_batch_sharding(mesh, x.shape[0])
-                    x = jax.lax.with_sharding_constraint(x, sh)
-                acc = blk.apply_batched(x, w, data_bits=spec.data_bits,
-                                        coeff_bits=spec.coeff_bits)
-                return _requantize(acc, spec)
+        def layer(w, x):
+            if mesh is not None:
+                from repro.parallel.sharding import cnn_batch_sharding
+                sh = cnn_batch_sharding(mesh, x.shape[0])
+                x = jax.lax.with_sharding_constraint(x, sh)
+            acc = blk.apply_batched(x, w, data_bits=spec.data_bits,
+                                    coeff_bits=spec.coeff_bits)
+            return _requantize(acc, spec)
 
-            w = self.params[i]
-            x_sds = jax.ShapeDtypeStruct(
-                (bucket, self.cfg.img_h, self.cfg.img_w, spec.in_channels),
-                conv2d.container_dtype(spec.data_bits))
-            w_sds = jax.ShapeDtypeStruct(w.shape, w.dtype)
-            with self._stats_lock:
-                self.compiles += 1
-            return jax.jit(layer).lower(w_sds, x_sds).compile()
+        return layer
 
-        return self.cache.get_or_build(self._layer_key(i, bucket), build)
+    def _layer_params(self, i: int):
+        return self.params[i]
 
-    def warmup(self) -> "CompiledCNN":
-        """AOT-compile every (layer, bucket) executable now, so no call
-        ever compiles on the serving critical path."""
-        for b in self.buckets:
-            for i in range(len(self.cfg.layers)):
-                self._compile_layer(i, b)
-        return self
+    def _layer_in_sds(self, i: int, bucket: int) -> jax.ShapeDtypeStruct:
+        spec = self.cfg.layers[i]
+        return jax.ShapeDtypeStruct(
+            (bucket, self.cfg.img_h, self.cfg.img_w, spec.in_channels),
+            conv2d.container_dtype(spec.data_bits))
 
-    @property
-    def warmed_up(self) -> bool:
-        return all(self._layer_key(i, b) in self.cache
-                   for b in self.buckets
-                   for i in range(len(self.cfg.layers)))
+    def _empty_output(self):
+        last = self.cfg.layers[-1]
+        return jnp.zeros(
+            (0, self.cfg.img_h, self.cfg.img_w, last.out_channels),
+            conv2d.container_dtype(last.data_bits))
 
-    # -- dispatch ----------------------------------------------------------
-    def bucket_for(self, n: int) -> int:
-        """Smallest bucket ≥ n (n must be ≤ max_batch)."""
-        for b in self.buckets:
-            if b >= n:
-                return b
-        raise ValueError(f"batch {n} exceeds max_batch={self.max_batch}")
-
-    def _run_bucket(self, xb, should_abort=None):
-        """xb: (n, H, W, C) with n ≤ max_batch → (n, H, W, C_out)."""
-        n = xb.shape[0]
-        bucket = self.bucket_for(n)
-        if n < bucket:
-            pad = jnp.zeros((bucket - n,) + xb.shape[1:], xb.dtype)
-            xb = jnp.concatenate([xb, pad])
+    def _place_batch(self, xb, bucket: int):
         if self.mesh is not None:
             from repro.parallel.sharding import cnn_batch_sharding
             xb = jax.device_put(xb, cnn_batch_sharding(self.mesh, bucket))
-        act = xb
-        for i in range(len(self.cfg.layers)):
-            if should_abort is not None and should_abort():
-                raise DispatchAborted(
-                    f"dispatch abandoned before layer {i} "
-                    f"(all served requests cancelled)")
-            act = self._compile_layer(i, bucket)(self.params[i], act)
-        with self._stats_lock:
-            self.bucket_hits[bucket] += 1
-        return act[:n]
-
-    def __call__(self, x, *, should_abort=None):
-        """x: one (H, W, C) image or an (N, H, W, C) batch of quantized
-        container ints.  Batches larger than ``max_batch`` run in
-        max_batch-sized chunks (the tail dispatching to its own bucket).
-        Bit-exact vs ``cnn_forward_ref`` at every batch size.
-
-        ``should_abort`` (optional zero-arg callable) is polled between
-        layers; returning True raises ``DispatchAborted`` — the async
-        gateway's cancellation hook, so a flight whose every request was
-        cancelled mid-execution stops paying for the remaining layers."""
-        x = jnp.asarray(x)
-        single = x.ndim == 3
-        if single:
-            x = x[None]
-        if x.shape[1:] != self.in_shape:
-            raise ValueError(
-                f"image shape {tuple(x.shape[1:])} != compiled input "
-                f"{self.in_shape}")
-        if x.dtype != self.in_dtype:
-            raise ValueError(
-                f"image dtype {x.dtype} != compiled input container "
-                f"{np.dtype(self.in_dtype).name}")
-        with self._stats_lock:
-            self.calls += 1
-        if x.shape[0] == 0:            # empty queue tick: nothing to run
-            last = self.cfg.layers[-1]
-            return jnp.zeros(
-                (0, self.cfg.img_h, self.cfg.img_w, last.out_channels),
-                conv2d.container_dtype(last.data_bits))
-        outs = [self._run_bucket(x[s:s + self.max_batch], should_abort)
-                for s in range(0, x.shape[0], self.max_batch)]
-        y = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
-        return y[0] if single else y
+        return xb
 
     # -- workload helpers --------------------------------------------------
-    def sample_images(self, k: int, seed: int = 0):
+    def sample_inputs(self, k: int, seed: int = 0):
         """``k`` random quantized images matching this executor's input
-        contract (shape + container dtype) — the canonical workload
-        generator shared by the launcher, benchmarks, and examples, so
-        the quantization rules live in one place."""
+        contract (shape + container dtype)."""
         from repro.kernels import ops
         rng = np.random.default_rng(seed)
         d0 = self.cfg.layers[0].data_bits
@@ -311,25 +476,15 @@ class CompiledCNN:
                          self.in_shape).astype(np.float32), d0))
             for _ in range(k)]
 
-    # -- observability -----------------------------------------------------
-    def stats(self) -> dict:
-        """Dispatch + compile telemetry.  ``executables``/``cache_*``
-        describe the (possibly shared) ``ExecutableCache``; ``compiles``
-        counts builds *this instance* performed — with a shared cache,
-        a second plan over identical layers reports 0.  Snapshot is
-        lock-consistent under the async drain."""
-        with self._stats_lock:
-            hits = dict(self.bucket_hits)
-            calls = self.calls
-            compiles = self.compiles
-        cache = self.cache.stats()
-        return {
-            "buckets": list(self.buckets),
-            "bucket_hits": hits,
-            "executables": cache["executables"],
-            "compiles": compiles,
-            "cache_compiles": cache["compiles"],
-            "cache_hits": cache["hits"],
-            "calls": calls,
-            "warmed_up": self.warmed_up,
-        }
+    def sample_images(self, k: int, seed: int = 0):
+        """.. deprecated:: use the workload-generic ``sample_inputs``."""
+        warnings.warn(
+            "CompiledCNN.sample_images is deprecated; use the "
+            "workload-generic CompiledModel.sample_inputs",
+            DeprecationWarning, stacklevel=2)
+        return self.sample_inputs(k, seed)
+
+    def validate_input(self, x, request_id: int = 0) -> np.ndarray:
+        return validate_container_input(
+            x, self.in_shape, self.in_dtype, request_id,
+            noun=self.input_noun)

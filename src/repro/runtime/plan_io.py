@@ -3,15 +3,18 @@
 Thin conveniences over ``DeploymentPlan.to_json``/``from_json`` so the
 plan→compile→serve flow reads naturally at call sites:
 
-    plan = deploy.plan_deployment(cfg, bm, device)
+    plan = deploy.plan_deployment(cfg, bm, device)     # or
+    plan = workloads.plan_moe_deployment(spec, "v5e")  # any workload kind
     runtime.save_plan(plan, "plan.json")          # machine A
     ...
     plan = runtime.load_plan("plan.json")         # machine B
-    cnn = runtime.CompiledCNN.from_plan(plan, params=params)
+    model = runtime.compile_plan(plan, params=params)
 
 The payload is versioned (``deploy.PLAN_SCHEMA_VERSION``) and pinned by
-the golden fixture ``tests/golden/plan_golden.json``; loading a payload
-from a different schema version raises rather than mis-deserializing.
+the golden fixtures ``tests/golden/plan_golden.json`` (v2) and
+``plan_v1_golden.json`` (the frozen v1 upgrade input); loading a payload
+from an unknown schema version raises rather than mis-deserializing,
+while v1 CNN payloads upgrade in place bit-identically.
 """
 
 from __future__ import annotations

@@ -1,0 +1,715 @@
+"""Workload registry: typed ``WorkloadSpec``s behind ``DeploymentPlan``.
+
+A deployment plan used to *be* a CNN plan — ``ConvLayerSpec`` was wired
+through the planner, the AOT runtime, the gateway, and the fleet.  This
+module is the seam that breaks that coupling: a plan now carries a
+typed, versioned **workload spec** (schema v2), and every layer above
+the kernels speaks the spec's protocol instead of assuming images:
+
+``WorkloadSpec``     the protocol: a frozen, JSON-round-trippable
+                     description of *what* is being served (network
+                     geometry + per-layer quantization), with a
+                     ``compile`` hook that builds the matching
+                     ``CompiledModel`` backend for a plan.
+``register_workload``/``get_workload``/``list_workloads``
+                     the kind → spec-class registry ``DeploymentPlan``
+                     serialization dispatches through.
+``CNNWorkloadSpec``  wraps the embedded ``CNNConfig`` — v1 plans
+                     upgrade to this spec bit-identically.
+``MoEWorkloadSpec``  quantized mixture-of-experts inference: expert
+                     weights fake-quantized to the plan's coeff_bits
+                     grid (``models.moe.quantize_moe_params``),
+                     activations to data_bits, validated against
+                     ``moe_layer_dense_ref`` the way ``validate_plan``
+                     re-traces conv kernels.
+``compile_plan``     one call from any plan to its AOT executor —
+                     the entry point the serving engines use, so
+                     ``CNNEngine``/``AsyncCNNGateway``/``Fleet`` are
+                     plan-type-blind.
+``plan_moe_deployment``
+                     the per-layer (bits) search under a
+                     ``DeviceProfile``'s budgets for MoE workloads —
+                     the same greedy predict-then-deploy loop as
+                     ``deploy.plan_deployment``, driven by an analytic
+                     demand model (matmul MACs, quantized weight
+                     bytes, expert-buffer working set).
+
+A request payload for an MoE plan is one ``(seq_len, d_model)`` float32
+block of token activations (the per-request analogue of an image); the
+compiled forward runs ``num_layers`` residual MoE layers over the
+bucketed batch.  All ``CompiledModel`` machinery — bucket ladder, AOT
+warmup, ``ExecutableCache`` sharing, chunking, ``should_abort`` — is
+inherited, so MoE plans serve through exactly the same gateway code
+paths as CNNs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.core.allocate import BUDGET_RESOURCES
+from repro.core.cnn import CNNConfig, ConvLayerSpec
+from repro.core.deploy import (DEFAULT_BIT_CANDIDATES, DeploymentError,
+                               DeploymentPlan, LayerAssignment, _as_device,
+                               device_profile)
+from repro.models import moe as moe_mod
+from repro.models.layers import split_keys
+from repro.runtime.compiled import CompiledModel, ExecutableCache
+
+#: registry block name for an MoE layer's assignment (LayerAssignment
+#: .block is a string either way; conv blocks come from repro.blocks,
+#: MoE layers are all the one batched expert-FFN kernel)
+MOE_BLOCK_NAME = "moe_ffn"
+
+#: rate resources (additive across layers); vmem_bytes is the capacity
+_RATE_RESOURCES = tuple(r for r in BUDGET_RESOURCES if r != "vmem_bytes")
+
+
+# ---------------------------------------------------------------------------
+# the protocol + registry
+# ---------------------------------------------------------------------------
+
+class WorkloadSpec:
+    """What a ``DeploymentPlan`` deploys, as a typed value.
+
+    Implementations are frozen dataclasses with a ``kind`` class
+    attribute and three obligations:
+
+    * ``to_payload()`` / ``from_payload(payload)`` — an exact JSON
+      round-trip (the plan schema embeds the payload under
+      ``workload.spec``; goldens pin it).
+    * ``compile(plan, ...)`` — build the ``CompiledModel`` backend that
+      executes ``plan`` (same keyword surface as
+      ``CompiledCNN.from_plan`` so the serving layers stay generic).
+    * value semantics — ``==`` must hold across a round-trip (the
+      golden-fixture tests rely on it).
+
+    Register implementations with ``register_workload`` so
+    ``DeploymentPlan.from_json`` can dispatch on ``kind``.
+    """
+
+    kind: str = "workload"
+
+    def to_payload(self) -> dict:
+        raise NotImplementedError
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "WorkloadSpec":
+        raise NotImplementedError
+
+    def compile(self, plan, *, params=None, key=None, max_batch: int = 16,
+                mesh=None, warmup: bool = True,
+                exec_cache: Optional[ExecutableCache] = None
+                ) -> CompiledModel:
+        raise NotImplementedError
+
+
+_WORKLOADS: Dict[str, Type[WorkloadSpec]] = {}
+
+
+def register_workload(cls: Type[WorkloadSpec]) -> Type[WorkloadSpec]:
+    """Class decorator: make ``cls`` the spec for its ``kind``."""
+    kind = cls.kind
+    if not kind or kind == WorkloadSpec.kind:
+        raise ValueError(f"{cls.__name__} must define a concrete kind")
+    if kind in _WORKLOADS and _WORKLOADS[kind] is not cls:
+        raise ValueError(f"workload kind {kind!r} already registered "
+                         f"by {_WORKLOADS[kind].__name__}")
+    _WORKLOADS[kind] = cls
+    return cls
+
+
+def get_workload(kind: str) -> Type[WorkloadSpec]:
+    try:
+        return _WORKLOADS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload kind {kind!r}; registered: "
+            f"{sorted(_WORKLOADS)}") from None
+
+
+def list_workloads() -> List[str]:
+    return sorted(_WORKLOADS)
+
+
+def workload_spec(plan: DeploymentPlan) -> WorkloadSpec:
+    """The typed spec of any plan: the ``workload`` field when present,
+    else the embedded ``CNNConfig`` wrapped as a ``CNNWorkloadSpec``
+    (every v1 plan and every planner-produced CNN plan)."""
+    if plan.workload is not None:
+        return plan.workload
+    if plan.cnn is not None:
+        return CNNWorkloadSpec(cnn=plan.cnn)
+    raise ValueError(
+        "plan carries neither a workload spec nor a CNNConfig — it "
+        "cannot be compiled (re-plan, or attach a spec)")
+
+
+def compile_plan(plan: DeploymentPlan, *, params=None, key=None,
+                 max_batch: int = 16, mesh=None, warmup: bool = True,
+                 exec_cache: Optional[ExecutableCache] = None
+                 ) -> CompiledModel:
+    """Any plan → its AOT batch-bucketed executor, dispatched through
+    the workload registry.  This is the one construction path the
+    serving layers use — ``CNNEngine.from_plan``, ``AsyncCNNGateway.
+    register_plan`` and the fleet all stay plan-type-blind."""
+    return workload_spec(plan).compile(
+        plan, params=params, key=key, max_batch=max_batch, mesh=mesh,
+        warmup=warmup, exec_cache=exec_cache)
+
+
+# ---------------------------------------------------------------------------
+# CNN: the legacy workload, wrapped
+# ---------------------------------------------------------------------------
+
+@register_workload
+@dataclass(frozen=True)
+class CNNWorkloadSpec(WorkloadSpec):
+    """The convolution workload: exactly the network the v1 schema
+    embedded as ``plan.cnn`` — the upgrade path wraps it unchanged, so
+    executable-cache keys and ``plan_config`` are bit-identical across
+    the v1 → v2 bump."""
+
+    cnn: CNNConfig
+    kind = "cnn"
+
+    def to_payload(self) -> dict:
+        return {
+            "img_h": int(self.cnn.img_h),
+            "img_w": int(self.cnn.img_w),
+            "layers": [{
+                "in_channels": int(s.in_channels),
+                "out_channels": int(s.out_channels),
+                "data_bits": int(s.data_bits),
+                "coeff_bits": int(s.coeff_bits),
+                "shift": int(s.shift),
+                "block": s.block,
+            } for s in self.cnn.layers],
+        }
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "CNNWorkloadSpec":
+        return cls(cnn=CNNConfig(
+            layers=tuple(ConvLayerSpec(
+                in_channels=int(s["in_channels"]),
+                out_channels=int(s["out_channels"]),
+                data_bits=int(s["data_bits"]),
+                coeff_bits=int(s["coeff_bits"]),
+                shift=int(s["shift"]), block=s["block"])
+                for s in payload["layers"]),
+            img_h=int(payload["img_h"]), img_w=int(payload["img_w"])))
+
+    def compile(self, plan, *, params=None, key=None, max_batch: int = 16,
+                mesh=None, warmup: bool = True,
+                exec_cache: Optional[ExecutableCache] = None
+                ) -> CompiledModel:
+        from repro.runtime.compiled import CompiledCNN
+        return CompiledCNN.from_plan(
+            plan, self.cnn, params=params, key=key, max_batch=max_batch,
+            mesh=mesh, warmup=warmup, exec_cache=exec_cache)
+
+
+# ---------------------------------------------------------------------------
+# MoE: quantized mixture-of-experts inference
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoELayerSpec:
+    """One MoE layer's geometry + planned quantization.  The typed
+    per-layer spec the v2 plan schema carries for MoE workloads (the
+    analogue of ``ConvLayerSpec``)."""
+    d_ff_expert: int
+    num_experts: int
+    top_k: int
+    data_bits: int = 8             # activation fake-quant grid
+    coeff_bits: int = 8            # expert-weight fake-quant grid
+    n_shared_experts: int = 0
+    capacity_factor: float = 2.0
+
+    def __post_init__(self):
+        if self.top_k < 1 or self.top_k > self.num_experts:
+            raise ValueError(
+                f"top_k={self.top_k} must be in [1, num_experts="
+                f"{self.num_experts}]")
+        for name in ("data_bits", "coeff_bits"):
+            v = getattr(self, name)
+            if not 2 <= v <= 16:
+                raise ValueError(f"{name}={v} outside [2, 16]")
+
+
+@register_workload
+@dataclass(frozen=True)
+class MoEWorkloadSpec(WorkloadSpec):
+    """A stack of residual MoE layers serving ``(seq_len, d_model)``
+    float32 token blocks — one block per request, the MoE analogue of
+    one image."""
+
+    layers: Tuple[MoELayerSpec, ...]
+    d_model: int
+    seq_len: int = 32
+    act: str = "silu"
+    mlp_gated: bool = True
+    kind = "moe"
+
+    def __post_init__(self):
+        if not self.layers:
+            raise ValueError("MoE workload needs at least one layer")
+        if self.d_model < 1 or self.seq_len < 1:
+            raise ValueError(
+                f"d_model={self.d_model} and seq_len={self.seq_len} "
+                f"must be ≥ 1")
+
+    def to_payload(self) -> dict:
+        return {
+            "d_model": int(self.d_model),
+            "seq_len": int(self.seq_len),
+            "act": self.act,
+            "mlp_gated": bool(self.mlp_gated),
+            "layers": [{
+                "d_ff_expert": int(s.d_ff_expert),
+                "num_experts": int(s.num_experts),
+                "top_k": int(s.top_k),
+                "data_bits": int(s.data_bits),
+                "coeff_bits": int(s.coeff_bits),
+                "n_shared_experts": int(s.n_shared_experts),
+                "capacity_factor": float(s.capacity_factor),
+            } for s in self.layers],
+        }
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "MoEWorkloadSpec":
+        return cls(
+            layers=tuple(MoELayerSpec(
+                d_ff_expert=int(s["d_ff_expert"]),
+                num_experts=int(s["num_experts"]),
+                top_k=int(s["top_k"]),
+                data_bits=int(s["data_bits"]),
+                coeff_bits=int(s["coeff_bits"]),
+                n_shared_experts=int(s["n_shared_experts"]),
+                capacity_factor=float(s["capacity_factor"]))
+                for s in payload["layers"]),
+            d_model=int(payload["d_model"]),
+            seq_len=int(payload["seq_len"]),
+            act=payload["act"], mlp_gated=bool(payload["mlp_gated"]))
+
+    def compile(self, plan, *, params=None, key=None, max_batch: int = 16,
+                mesh=None, warmup: bool = True,
+                exec_cache: Optional[ExecutableCache] = None
+                ) -> CompiledModel:
+        return CompiledMoE.from_plan(
+            plan, params=params, key=key, max_batch=max_batch, mesh=mesh,
+            warmup=warmup, exec_cache=exec_cache)
+
+    # -- model-config shim + params --------------------------------------
+    def layer_cfg(self, i: int) -> "_MoELayerModelCfg":
+        """The config view ``models.moe`` expects, for layer ``i``."""
+        s = self.layers[i]
+        return _MoELayerModelCfg(
+            moe=MoEConfig(num_experts=s.num_experts, top_k=s.top_k,
+                          d_ff_expert=s.d_ff_expert,
+                          n_shared_experts=s.n_shared_experts,
+                          capacity_factor=s.capacity_factor),
+            d_model=self.d_model, act=self.act, mlp_gated=self.mlp_gated)
+
+    def init_params(self, key, *, quantized: bool = True) -> list:
+        """Per-layer ``init_moe`` draws (float32), expert weights
+        fake-quantized to each layer's ``coeff_bits`` grid unless
+        ``quantized=False`` (the float oracle draw)."""
+        ks = split_keys(key, len(self.layers))
+        out = []
+        for i, s in enumerate(self.layers):
+            p = moe_mod.init_moe(ks[i], self.layer_cfg(i))
+            out.append(moe_mod.quantize_moe_params(p, s.coeff_bits)
+                       if quantized else p)
+        return out
+
+
+@dataclass(frozen=True)
+class _MoELayerModelCfg:
+    """The slice of ``configs.base.ModelConfig`` that ``models.moe``
+    reads, so a workload spec can drive ``moe_layer`` without
+    fabricating a whole transformer config.  Serving runs float32 on
+    the flat (single-group, hint-free) path — deterministic on CPU."""
+    moe: MoEConfig
+    d_model: int
+    act: str = "silu"
+    mlp_gated: bool = True
+    moe_groups: int = 1
+    moe_shard_hints: bool = False
+    moe_combine_shardmap: bool = False
+
+    @property
+    def jnp_dtype(self):
+        return jnp.float32
+
+
+def _fake_quant(x, bits: int):
+    """Symmetric ``bits``-bit fake quantization with a dynamic
+    **per-token** scale: each token's max magnitude maps to
+    ``2^(bits-1) - 1`` levels — the activation-side twin of
+    ``quantize_moe_params``.  Per-token (not per-tensor) scaling is
+    what makes bucketed dispatch sound: a token's quantization grid
+    never depends on which batch — or how much padding — it shares a
+    dispatch with, so padding to a bucket cannot perturb real
+    outputs."""
+    hi = float((1 << (bits - 1)) - 1)
+    s = hi / jnp.maximum(
+        jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-6)
+    return jnp.round(x * s) / s
+
+
+class CompiledMoE(CompiledModel):
+    """The quantized-MoE backend: each layer is one AOT-compiled
+    residual MoE block — activations fake-quantized to the layer's
+    ``data_bits``, expert weights pre-quantized to ``coeff_bits`` —
+    bucketed/batched/cached exactly like ``CompiledCNN``."""
+
+    kind = "moe"
+    input_noun = "token block"
+
+    def __init__(self, spec: MoEWorkloadSpec, params, *,
+                 max_batch: int = 16, mesh=None, warmup: bool = True,
+                 exec_cache: Optional[ExecutableCache] = None):
+        if len(params) != len(spec.layers):
+            raise ValueError(
+                f"need one param dict per layer: {len(params)} for "
+                f"{len(spec.layers)} layers")
+        self.spec = spec
+        self.params = list(params)
+        self.num_layers = len(spec.layers)
+        self.in_shape = (spec.seq_len, spec.d_model)
+        self.in_dtype = jnp.float32
+        super().__init__(max_batch=max_batch, mesh=mesh, warmup=warmup,
+                         exec_cache=exec_cache)
+
+    @classmethod
+    def from_plan(cls, plan, *, params=None, key=None,
+                  max_batch: int = 16, mesh=None, warmup: bool = True,
+                  exec_cache: Optional[ExecutableCache] = None
+                  ) -> "CompiledMoE":
+        """Executor for a planned MoE deployment: the spec with each
+        layer's planned (data_bits, coeff_bits) baked in; ``params``
+        default to a fresh quantized ``init_moe`` draw per layer."""
+        spec = moe_plan_spec(plan)
+        if params is None:
+            key = key if key is not None else jax.random.PRNGKey(0)
+            params = spec.init_params(key)
+        return cls(spec, params, max_batch=max_batch, mesh=mesh,
+                   warmup=warmup, exec_cache=exec_cache)
+
+    # -- backend hooks ----------------------------------------------------
+    def _layer_key(self, i: int, bucket: int) -> tuple:
+        s = self.spec.layers[i]
+        return (MOE_BLOCK_NAME, self.spec.d_model, s.d_ff_expert,
+                s.num_experts, s.top_k, s.n_shared_experts,
+                float(s.capacity_factor), s.data_bits, s.coeff_bits,
+                self.spec.seq_len, self.spec.act, self.spec.mlp_gated,
+                self._mesh_token, bucket)
+
+    def _layer_fn(self, i: int):
+        cfg = self.spec.layer_cfg(i)
+        data_bits = self.spec.layers[i].data_bits
+
+        def layer(p, x):
+            # residual MoE block over the quantized activation grid;
+            # the aux (load-balancing) loss is a training quantity —
+            # inference drops it
+            y, _aux = moe_mod.moe_layer(p, _fake_quant(x, data_bits), cfg)
+            return x + y
+
+        return layer
+
+    def _layer_params(self, i: int):
+        return self.params[i]
+
+    def _layer_in_sds(self, i: int, bucket: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(
+            (bucket, self.spec.seq_len, self.spec.d_model), jnp.float32)
+
+    def _empty_output(self):
+        return jnp.zeros((0,) + self.in_shape, jnp.float32)
+
+    # -- workload helpers --------------------------------------------------
+    def sample_inputs(self, k: int, seed: int = 0):
+        """``k`` random float32 token blocks (unit-normal activations)
+        matching this executor's ``(seq_len, d_model)`` contract."""
+        rng = np.random.default_rng(seed)
+        return [rng.standard_normal(self.in_shape).astype(np.float32)
+                for _ in range(k)]
+
+    def validate_input(self, x, request_id: int = 0) -> np.ndarray:
+        """Shape + finiteness admission check: token activations must be
+        real finite floats (NaN/Inf would propagate through every
+        expert); any real dtype is accepted and served as float32."""
+        x = np.asarray(x)
+        if tuple(x.shape) != tuple(self.in_shape):
+            raise ValueError(
+                f"request {request_id}: {self.input_noun} shape "
+                f"{tuple(x.shape)} != engine input {tuple(self.in_shape)}")
+        if not np.issubdtype(x.dtype, np.floating) \
+                and not np.issubdtype(x.dtype, np.integer):
+            raise ValueError(
+                f"request {request_id}: {self.input_noun} dtype {x.dtype} "
+                f"is not a real numeric type")
+        if not np.all(np.isfinite(x)):
+            raise ValueError(
+                f"request {request_id}: {self.input_noun} carries "
+                f"non-finite values (NaN/Inf) — they would propagate "
+                f"through every routed expert")
+        return x
+
+
+# ---------------------------------------------------------------------------
+# the MoE planner: per-layer bit search under device budgets
+# ---------------------------------------------------------------------------
+
+def moe_layer_demand(spec: MoEWorkloadSpec, layer: MoELayerSpec,
+                     data_bits: int, coeff_bits: int) -> Dict[str, float]:
+    """Analytic per-request demand of one MoE layer in the device
+    budget units: matmul MACs (``mxu_cost``), weight traffic at the
+    quantized container width plus activation traffic (``hbm_bytes``),
+    elementwise work (``vpu_ops``), and the expert-buffer + one-weight
+    working set (``vmem_bytes``, a capacity).  The MoE twin of
+    ``deploy.predict_layer_demand`` — analytic rather than sweep-fitted
+    because the expert FFN is dense matmul, the regime the roofline
+    model is exact in."""
+    S, d = spec.seq_len, spec.d_model
+    fe, e, k = layer.d_ff_expert, layer.num_experts, layer.top_k
+    fs = fe * layer.n_shared_experts
+    nmats = 3 if spec.mlp_gated else 2
+    routed = S * k                      # expert-token assignments
+    mxu = (S * d * e                    # router projection
+           + nmats * routed * d * fe    # expert FFN on dispatched tokens
+           + nmats * S * d * fs)        # always-on shared experts
+    weight_bytes = (nmats * e * d * fe + nmats * d * fs) * coeff_bits / 8
+    act_bytes = S * d * data_bits / 8
+    vpu = S * (e + k * fe + d)          # softmax + act + combine
+    cap = int(max(k, round(layer.capacity_factor * S * k / e)))
+    vmem = float(e * cap * d * 4 + e * d * fe * 4)
+    return {"mxu_cost": float(mxu),
+            "hbm_bytes": float(weight_bytes + act_bytes),
+            "vpu_ops": float(vpu), "vmem_bytes": vmem}
+
+
+def plan_moe_deployment(spec: MoEWorkloadSpec, device=None, *,
+                        bit_candidates=DEFAULT_BIT_CANDIDATES,
+                        target: float = 0.8,
+                        on_infeasible: str = "raise") -> DeploymentPlan:
+    """Greedy per-layer (data_bits, coeff_bits) assignment for an MoE
+    workload under one device's budgets — ``deploy.plan_deployment``'s
+    loop with the analytic MoE demand model.  Each layer takes the
+    highest-precision candidate that fits the remaining budget
+    (lexicographically: data+coeff bits, then lowest normalized
+    demand); ``bit_candidates=None`` pins every layer to its spec's
+    bits.  ``on_infeasible="fallback"`` assigns the least-over-budget
+    candidate and marks the plan ``feasible=False`` instead of raising.
+    The returned plan embeds the spec with assigned bits baked in
+    (``plan.workload``) — the MoE analogue of ``plan.cnn``."""
+    if on_infeasible not in ("raise", "fallback"):
+        raise ValueError(f"on_infeasible={on_infeasible!r}")
+    dev = (device_profile(device) if isinstance(device, str)
+           else _as_device(device))
+    budgets = {r: float(dev.budgets[r]) for r in BUDGET_RESOURCES}
+    remaining = {r: target * budgets[r] for r in _RATE_RESOURCES}
+    vmem_cap = target * budgets["vmem_bytes"]
+    eps = 1e-9
+
+    assignments: List[LayerAssignment] = []
+    planned_layers: List[MoELayerSpec] = []
+    feasible = True
+    for i, layer in enumerate(spec.layers):
+        cands = ([(layer.data_bits, layer.coeff_bits)]
+                 if bit_candidates is None
+                 else list(dict.fromkeys(tuple(b) for b in bit_candidates)))
+        best = best_key = None
+        cheapest, cheapest_over = None, float("inf")
+        for d_bits, c_bits in cands:
+            demand = moe_layer_demand(spec, layer, d_bits, c_bits)
+            over = max(
+                max((demand[r] - remaining[r]) / budgets[r]
+                    for r in _RATE_RESOURCES),
+                (demand["vmem_bytes"] - vmem_cap) / budgets["vmem_bytes"])
+            norm = sum(demand[r] / budgets[r] for r in _RATE_RESOURCES)
+            if over < cheapest_over:
+                cheapest, cheapest_over = (d_bits, c_bits, demand), over
+            if over > eps:
+                continue
+            key = (d_bits + c_bits, -norm)
+            if best_key is None or key > best_key:
+                best, best_key = (d_bits, c_bits, demand), key
+        if best is None:
+            if on_infeasible == "raise":
+                d_bits, c_bits, cdem = cheapest
+                raise DeploymentError(
+                    f"MoE layer {i} (E={layer.num_experts}, "
+                    f"ff={layer.d_ff_expert}, k={layer.top_k}) does not "
+                    f"fit device {dev.name!r} at target {target:.0%}: "
+                    f"least-demanding candidate d{d_bits}/c{c_bits} "
+                    f"exceeds the budget by {cheapest_over:.1%}")
+            best = cheapest
+            feasible = False
+        d_bits, c_bits, demand = best
+        for r in _RATE_RESOURCES:
+            remaining[r] = max(0.0, remaining[r] - demand[r])
+        assignments.append(LayerAssignment(
+            index=i, block=MOE_BLOCK_NAME, data_bits=d_bits,
+            coeff_bits=c_bits, calls=spec.seq_len * layer.top_k,
+            demand=demand))
+        planned_layers.append(dataclasses.replace(
+            layer, data_bits=d_bits, coeff_bits=c_bits))
+
+    totals = {r: sum(a.demand[r] for a in assignments)
+              for r in _RATE_RESOURCES}
+    totals["vmem_bytes"] = max(
+        (a.demand["vmem_bytes"] for a in assignments), default=0.0)
+    usage = {r: 100.0 * totals[r] / budgets[r] for r in BUDGET_RESOURCES}
+    planned = dataclasses.replace(spec, layers=tuple(planned_layers))
+    plan = DeploymentPlan(
+        device=dev, target=target, layers=tuple(assignments),
+        demand=totals, usage_pct=usage,
+        convs_per_step=float(spec.seq_len),    # tokens per request
+        feasible=feasible, cnn=None, workload=planned)
+    plan.quant_error = moe_quantization_error(planned)
+    return plan
+
+
+def moe_plan_spec(plan: DeploymentPlan) -> MoEWorkloadSpec:
+    """The plan baked back into a runnable spec: each layer gets the
+    planned (data_bits, coeff_bits) — the MoE analogue of
+    ``deploy.plan_config``."""
+    spec = workload_spec(plan)
+    if not isinstance(spec, MoEWorkloadSpec):
+        raise ValueError(
+            f"plan carries a {spec.kind!r} workload, not 'moe'")
+    if len(spec.layers) != len(plan.layers):
+        raise ValueError(
+            f"plan has {len(plan.layers)} assignments for "
+            f"{len(spec.layers)} spec layers")
+    layers = tuple(dataclasses.replace(s, data_bits=a.data_bits,
+                                       coeff_bits=a.coeff_bits)
+                   for s, a in zip(spec.layers, plan.layers))
+    return dataclasses.replace(spec, layers=layers)
+
+
+# ---------------------------------------------------------------------------
+# validation vs the dense oracle (the MoE twin of deploy.validate_plan)
+# ---------------------------------------------------------------------------
+
+def _eager_forward(spec: MoEWorkloadSpec, params, x, *,
+                   quant_act: bool = True):
+    """Un-jitted residual stack over the spec's layers."""
+    act = x
+    for i in range(len(spec.layers)):
+        xi = (_fake_quant(act, spec.layers[i].data_bits)
+              if quant_act else act)
+        y, _ = moe_mod.moe_layer(params[i], xi, spec.layer_cfg(i))
+        act = act + y
+    return act
+
+
+def _dense_ref_forward(spec: MoEWorkloadSpec, params, x):
+    """Residual stack through ``moe_layer_dense_ref`` — every expert on
+    every token, no capacity drops, no quantization: the float oracle."""
+    act = x
+    for i in range(len(spec.layers)):
+        act = act + moe_mod.moe_layer_dense_ref(
+            params[i], act, spec.layer_cfg(i))
+    return act
+
+
+def moe_quantization_error(spec: MoEWorkloadSpec, *, key=None,
+                           seed: int = 0) -> float:
+    """Relative RMSE of the quantized MoE stack against the float
+    dense-reference oracle on a deterministic probe block (the per-plan
+    Pareto axis — ``deploy.quantization_error``'s MoE twin)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    float_params = spec.init_params(key, quantized=False)
+    quant_params = [moe_mod.quantize_moe_params(p, s.coeff_bits)
+                    for p, s in zip(float_params, spec.layers)]
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(
+        (1, spec.seq_len, spec.d_model)), jnp.float32)
+    yq = _eager_forward(spec, quant_params, x)
+    yf = _dense_ref_forward(spec, float_params, x)
+    num = float(jnp.sqrt(jnp.mean((yq - yf) ** 2)))
+    den = float(jnp.sqrt(jnp.mean(yf ** 2)))
+    return num / max(den, 1e-9)
+
+
+@dataclass
+class MoEPlanValidation:
+    """Validation verdict for one MoE plan: the compiled (bucketed,
+    AOT) path must match the eager quantized stack, and the quantized
+    stack must track the dense float oracle within quantization
+    tolerance."""
+    compiled_matches_eager: bool
+    dense_ref_rel_err: float
+    quant_error: float             # the probe-seed Pareto number
+
+
+def validate_moe_plan(plan: DeploymentPlan, *, key=None, seed: int = 0,
+                      max_batch: int = 4, batch: int = 3,
+                      atol: float = 1e-5) -> MoEPlanValidation:
+    """Close the loop for an MoE plan the way ``deploy.validate_plan``
+    does for CNNs: execute the plan through ``CompiledMoE`` (bucketed
+    AOT dispatch, including a padded bucket) and check it against the
+    un-jitted quantized stack, then score quantization against
+    ``moe_layer_dense_ref``."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    spec = moe_plan_spec(plan)
+    params = spec.init_params(key)
+    compiled = CompiledMoE(spec, params, max_batch=max_batch)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(
+        (batch, spec.seq_len, spec.d_model)), jnp.float32)
+    y_compiled = np.asarray(compiled(x))
+    y_eager = np.asarray(_eager_forward(spec, params, x))
+    matches = bool(np.allclose(y_compiled, y_eager,
+                               rtol=1e-5, atol=atol))
+    float_params = spec.init_params(key, quantized=False)
+    y_ref = np.asarray(_dense_ref_forward(spec, float_params, x))
+    denom = float(np.sqrt(np.mean(y_ref ** 2)))
+    rel = float(np.sqrt(np.mean((y_eager - y_ref) ** 2))) / max(denom,
+                                                                1e-9)
+    return MoEPlanValidation(
+        compiled_matches_eager=matches, dense_ref_rel_err=rel,
+        quant_error=moe_quantization_error(spec, key=key, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# bridge from the config zoo
+# ---------------------------------------------------------------------------
+
+def moe_workload_from_config(cfg, *, n_layers: int = 2,
+                             seq_len: int = 32,
+                             data_bits: int = 8, coeff_bits: int = 8,
+                             capacity_factor: Optional[float] = None
+                             ) -> MoEWorkloadSpec:
+    """An ``MoEWorkloadSpec`` from a registry ``ModelConfig`` (e.g.
+    ``smoke_config("qwen3-moe-30b-a3b")``): ``n_layers`` MoE blocks at
+    the config's expert geometry, planned at the given starting bits.
+    ``capacity_factor`` defaults to a generous 2.0 — serving validates
+    against the no-drop dense oracle, so the capacity bound should not
+    be the thing dropping tokens."""
+    if cfg.moe is None:
+        raise ValueError(
+            f"config {cfg.name!r} (family {cfg.family!r}) has no MoE "
+            f"block — pick an arch with cfg.moe set")
+    m = cfg.moe
+    layer = MoELayerSpec(
+        d_ff_expert=m.d_ff_expert, num_experts=m.num_experts,
+        top_k=m.top_k, data_bits=data_bits, coeff_bits=coeff_bits,
+        n_shared_experts=m.n_shared_experts,
+        capacity_factor=(2.0 if capacity_factor is None
+                         else capacity_factor))
+    return MoEWorkloadSpec(
+        layers=(layer,) * n_layers, d_model=cfg.d_model,
+        seq_len=seq_len, act=cfg.act, mlp_gated=cfg.mlp_gated)

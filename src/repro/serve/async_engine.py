@@ -1,4 +1,4 @@
-"""Async continuous-batching gateway over ``repro.runtime.CompiledCNN``.
+"""Async continuous-batching gateway over ``repro.runtime.CompiledModel``.
 
 The sync ``CNNEngine`` is a *tick loop*: gather whatever occupies the
 slots, run one blocking step, scatter, repeat — fine for offline
@@ -25,7 +25,7 @@ vLLM-style request-level scheduler adapted to feed-forward CNN serving:
                 itself.  ``submit_chunk`` admits request batches
                 *partially* — free capacity worth of images instead of
                 all-or-nothing.
-  continuous    the drain task launches a new ``CompiledCNN`` bucket
+  continuous    the drain task launches a new ``CompiledModel`` bucket
                 dispatch **the moment slots free up** — no global tick.
                 Dispatches run in a worker thread pool, so the event
                 loop keeps admitting, cancelling, and expiring requests
@@ -41,7 +41,7 @@ vLLM-style request-level scheduler adapted to feed-forward CNN serving:
   cancellation  the future returned by ``submit`` supports
                 ``cancel()`` at any point: while queued (slot of the
                 bound is released immediately), or mid-flight (the
-                dispatch polls ``CompiledCNN``'s ``should_abort`` hook
+                dispatch polls ``CompiledModel``'s ``should_abort`` hook
                 and abandons the remaining layers once every request
                 in the flight is cancelled).
   multi-plan    ``register_plan`` routes any number of
@@ -70,10 +70,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.runtime.compiled import (CompiledCNN, DispatchAborted,
+from repro.runtime.compiled import (CompiledModel, DispatchAborted,
                                     ExecutableCache)
 from repro.serve import policy as policy_mod
-from repro.serve.cnn_engine import validate_image
 from repro.serve.policy import PolicyLike, get_policy
 from repro.serve.slots import GatewayStats, SlotPool
 
@@ -354,10 +353,14 @@ class AsyncServeConfig:
 
 
 class _PlanEntry:
-    def __init__(self, plan_id: str, compiled: CompiledCNN):
+    def __init__(self, plan_id: str, compiled: CompiledModel):
         self.plan_id = plan_id
         self.compiled = compiled
         self.served = 0
+
+    @property
+    def kind(self) -> str:
+        return self.compiled.kind
 
 
 class AsyncCNNGateway(SlotPool):
@@ -432,19 +435,23 @@ class AsyncCNNGateway(SlotPool):
     # -- plan registry ----------------------------------------------------
     def register_plan(self, plan, *, plan_id: Optional[str] = None,
                       params=None, key=None, mesh=None,
-                      compiled: Optional[CompiledCNN] = None) -> str:
-        """Route ``plan`` through this gateway.  All registered plans
-        compile into the gateway's shared ``ExecutableCache`` — layers
-        that coincide across plans (same block/bits/geometry) reuse one
-        executable per bucket, so registering a second near-identical
-        plan is nearly free.  The first registered plan is the default
-        target for ``submit``."""
+                      compiled: Optional[CompiledModel] = None) -> str:
+        """Route ``plan`` through this gateway — **any workload kind**:
+        the plan's ``WorkloadSpec`` builds the compiled backend
+        (``runtime.compile_plan``), so a quantized-MoE plan and a CNN
+        plan serve side by side.  All registered plans compile into the
+        gateway's shared ``ExecutableCache`` — layers that coincide
+        across plans (same block/bits/geometry) reuse one executable
+        per bucket, so registering a second near-identical plan is
+        nearly free.  The first registered plan is the default target
+        for ``submit``."""
         if plan_id is None:
             plan_id = f"plan{len(self.plans)}"
         if plan_id in self.plans:
             raise ValueError(f"plan id {plan_id!r} already registered")
         if compiled is None:
-            compiled = CompiledCNN.from_plan(
+            from repro.runtime.workloads import compile_plan
+            compiled = compile_plan(
                 plan, params=params, key=key, mesh=mesh,
                 max_batch=self.cfg.max_batch, warmup=self.cfg.aot_warmup,
                 exec_cache=self.exec_cache)
@@ -517,8 +524,7 @@ class AsyncCNNGateway(SlotPool):
     def _make_request(self, image, plan_id, priority, deadline
                       ) -> Tuple[AsyncRequest, "asyncio.Future"]:
         entry = self._entry(plan_id)
-        img = validate_image(image, entry.compiled.in_shape,
-                             entry.compiled.in_dtype, self._next_id)
+        img = entry.compiled.validate_input(image, self._next_id)
         now = self.clock()
         req = AsyncRequest(
             image=img, plan_id=entry.plan_id, request_id=self._next_id,

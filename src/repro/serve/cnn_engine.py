@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.blocks import BlockLike
 from repro.core.cnn import CNNConfig
-from repro.runtime.compiled import CompiledCNN
+from repro.runtime.compiled import (CompiledCNN, CompiledModel,
+                                    validate_container_input)
 from repro.serve.slots import SlotPool
 
 
@@ -43,7 +44,11 @@ class CNNServeConfig:
 
 @dataclass
 class ImageRequest:
-    image: np.ndarray              # (H, W, C) quantized container ints
+    """One request payload.  ``image`` is whatever the plan's workload
+    serves — an (H, W, C) quantized container-int image for CNN plans,
+    a (seq_len, d_model) float32 token block for MoE plans; the engine's
+    compiled backend validates it at admission."""
+    image: np.ndarray
     request_id: int = 0
     priority: int = 0              # higher = more urgent (policy="edf")
     deadline: Optional[float] = None   # absolute engine-clock deadline
@@ -52,35 +57,25 @@ class ImageRequest:
 
 
 def validate_image(img, in_shape, in_dtype, request_id=0) -> np.ndarray:
-    """Shape + dtype admission check shared by the sync engine and the
-    async gateway.  A float image must carry exact container-range
-    integers — the seed's silent ``np.asarray(img, in_dtype)``
-    truncation (0.9 → 0, 200.0 → -56 for int8) is a ``ValueError``
-    here, as is any value that would wrap in the container."""
-    img = np.asarray(img)
-    if tuple(img.shape) != tuple(in_shape):
-        raise ValueError(
-            f"request {request_id}: image shape {tuple(img.shape)} "
-            f"!= engine input {tuple(in_shape)}")
-    if not np.issubdtype(img.dtype, np.integer):
-        if not np.all(np.isfinite(img)) or np.any(img != np.round(img)):
-            raise ValueError(
-                f"request {request_id}: image dtype {img.dtype} "
-                f"carries non-integral values — quantize explicitly "
-                f"(e.g. ops.quantize_fixed) before submitting")
-    info = np.iinfo(in_dtype)
-    if np.any(img < info.min) or np.any(img > info.max):
-        raise ValueError(
-            f"request {request_id}: image values outside the "
-            f"{np.dtype(in_dtype).name} container range "
-            f"[{info.min}, {info.max}] — would wrap, not clamp")
-    return img
+    """Deprecated alias of ``runtime.validate_container_input`` (the
+    shape + container-range admission check for integer-quantized
+    inputs).  Per-workload validation lives on the compiled backend now
+    — ``CompiledModel.validate_input`` — so the engines cover non-image
+    workloads too; this name survives for pre-workload callers."""
+    import warnings
+    warnings.warn(
+        "validate_image is deprecated; use runtime."
+        "validate_container_input, or the per-workload "
+        "CompiledModel.validate_input", DeprecationWarning, stacklevel=2)
+    return validate_container_input(img, in_shape, in_dtype, request_id,
+                                    noun="image")
 
 
 class CNNEngine(SlotPool):
-    def __init__(self, cfg: CNNConfig, params, blocks: Sequence[BlockLike],
+    def __init__(self, cfg: Optional[CNNConfig] = None, params=None,
+                 blocks: Optional[Sequence[BlockLike]] = None,
                  serve_cfg: Optional[CNNServeConfig] = None, mesh=None, *,
-                 compiled: Optional[CompiledCNN] = None):
+                 compiled: Optional[CompiledModel] = None):
         serve_cfg = serve_cfg if serve_cfg is not None else CNNServeConfig()
         super().__init__(serve_cfg.max_batch)
         if compiled is None:
@@ -93,9 +88,11 @@ class CNNEngine(SlotPool):
                 f"slot pool ({serve_cfg.max_batch}): a full pool could "
                 f"never dispatch")
         self.compiled = compiled
-        self.cfg = compiled.cfg
-        self.params = compiled.params
-        self.blocks = compiled.blocks
+        # CNN backends expose cfg/params/blocks; other workloads don't —
+        # the engine itself only ever touches the CompiledModel protocol
+        self.cfg = getattr(compiled, "cfg", None)
+        self.params = getattr(compiled, "params", None)
+        self.blocks = getattr(compiled, "blocks", None)
         self.serve = serve_cfg
         self.mesh = mesh
         self.in_shape = compiled.in_shape
@@ -108,28 +105,36 @@ class CNNEngine(SlotPool):
                   params=None, key=None,
                   serve_cfg: Optional[CNNServeConfig] = None, mesh=None
                   ) -> "CNNEngine":
-        """Engine for a planned deployment: each layer runs the
-        (block, bits) assignment of ``plan`` (``cfg`` defaults to the
-        network embedded in the plan); ``params`` default to a fresh
-        ``init_cnn`` draw at the planned precisions."""
+        """Engine for a planned deployment of **any workload kind**:
+        the plan's ``WorkloadSpec`` builds the compiled backend
+        (``runtime.compile_plan``), so an MoE plan serves through the
+        same engine as a CNN plan.  ``cfg`` (CNN plans only) overrides
+        the network embedded in the plan; ``params`` default to a fresh
+        draw at the planned precisions."""
         serve_cfg = serve_cfg if serve_cfg is not None else CNNServeConfig()
         if serve_cfg.max_batch < 1:       # fail before compiling anything
             raise ValueError(f"max_batch={serve_cfg.max_batch} must be ≥ 1")
-        compiled = CompiledCNN.from_plan(
-            plan, cfg, params=params, key=key,
-            max_batch=serve_cfg.max_batch, mesh=mesh,
-            warmup=serve_cfg.aot_warmup)
-        return cls(compiled.cfg, compiled.params, compiled.blocks,
-                   serve_cfg, mesh, compiled=compiled)
+        if cfg is not None:
+            compiled = CompiledCNN.from_plan(
+                plan, cfg, params=params, key=key,
+                max_batch=serve_cfg.max_batch, mesh=mesh,
+                warmup=serve_cfg.aot_warmup)
+        else:
+            from repro.runtime.workloads import compile_plan
+            compiled = compile_plan(
+                plan, params=params, key=key,
+                max_batch=serve_cfg.max_batch, mesh=mesh,
+                warmup=serve_cfg.aot_warmup)
+        return cls(serve_cfg=serve_cfg, mesh=mesh, compiled=compiled)
 
     # -- admission -------------------------------------------------------
     def submit(self, req: ImageRequest) -> bool:
         """Place a request into a free slot; False when the pool is full
         (the request waits in the caller's queue for the next step).
-        Shape AND dtype are validated via ``validate_image`` — the
-        admission contract the async gateway shares."""
-        validate_image(req.image, self.in_shape, self.in_dtype,
-                       req.request_id)
+        Shape AND dtype are validated via the compiled backend's
+        per-workload ``validate_input`` — the admission contract the
+        async gateway shares."""
+        self.compiled.validate_input(req.image, req.request_id)
         slot = self._free_slot()
         if slot is None:
             return False

@@ -35,7 +35,7 @@ def _plan(cfg=None):
 
 
 def _images(compiled, k, seed=0):
-    return compiled.sample_images(k, seed)
+    return compiled.sample_inputs(k, seed)
 
 
 def _req(i, *, plan_id="p", priority=0, deadline=None, now=0.0):

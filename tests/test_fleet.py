@@ -229,7 +229,7 @@ def test_fleet_serves_bit_exact_across_workers(compiled_plan):
     workers = [FleetWorker("edge0", _gateway(compiled_plan), "edge"),
                FleetWorker("v5e0", _gateway(compiled_plan), "v5e"),
                FleetWorker("v5p0", _gateway(compiled_plan), "v5p")]
-    imgs = compiled.sample_images(9)
+    imgs = compiled.sample_inputs(9)
 
     async def main():
         fleet = Fleet(workers, router="round_robin")
@@ -269,7 +269,7 @@ def test_fleet_validation():
 
 def test_fleet_no_worker_and_saturation_errors(compiled_plan):
     _, compiled = compiled_plan
-    imgs = compiled.sample_images(4)
+    imgs = compiled.sample_inputs(4)
 
     async def main():
         workers = [FleetWorker("a", _gateway(compiled_plan,
@@ -302,7 +302,7 @@ def test_fleet_drain_loses_nothing(compiled_plan):
     hands every queued request back, the fleet re-routes them, and all
     of them complete bit-exactly."""
     _, compiled = compiled_plan
-    imgs = compiled.sample_images(12)
+    imgs = compiled.sample_inputs(12)
 
     async def main():
         workers = [FleetWorker("a", _gateway(compiled_plan), "v5e"),
@@ -354,7 +354,7 @@ def test_fleet_failure_retry_ejection_and_probe_readmission(
                                         probe_interval=0.05)),
         FleetWorker("good", _gateway(compiled_plan), "v5e"),
     ]
-    imgs = compiled.sample_images(6)
+    imgs = compiled.sample_inputs(6)
 
     async def main():
         # least-loaded prefers the cheaper "bad" worker when idle
@@ -411,7 +411,7 @@ def test_fleet_cancelled_canary_releases_probe(compiled_plan):
                                         probe_interval=0.05)),
         FleetWorker("good", _gateway(compiled_plan), "v5e"),
     ]
-    imgs = compiled.sample_images(3)
+    imgs = compiled.sample_inputs(3)
 
     async def main():
         # least-loaded prefers the cheaper "bad" worker when idle
@@ -446,7 +446,7 @@ def test_fleet_submit_chunk_partial_admission(compiled_plan):
     workers), returns the refused remainder count, and an outage
     (no admissible worker at all) still raises."""
     _, compiled = compiled_plan
-    imgs = compiled.sample_images(6)
+    imgs = compiled.sample_inputs(6)
 
     async def main():
         workers = [FleetWorker("a", _gateway(compiled_plan,

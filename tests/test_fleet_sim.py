@@ -120,6 +120,47 @@ def test_drain_after_trace_end_is_a_noop_drain():
     assert r.per_worker["w1-v5e"]["drained"]
 
 
+def test_mixed_plan_trace_respects_workload_hosting():
+    """A 70/30 CNN/MoE traffic mix over a fleet where only the fast
+    tiers host the MoE plan (it is infeasible on edge — see
+    ``plan_moe_deployment``): everything completes, and the edge worker
+    never serves a single MoE request."""
+    mixed = (SimWorkerSpec("w0-edge", "edge", plan_ids=("cnn",)),
+             SimWorkerSpec("w1-v5e", "v5e", plan_ids=("cnn", "moe")),
+             SimWorkerSpec("w2-v5p", "v5p", plan_ids=("cnn", "moe")))
+    trace = make_trace(10_000, _rate(), seed=42,
+                       plan_mix={"cnn": 0.7, "moe": 0.3})
+    assert trace.plan_ids == ("cnn", "moe")
+    n_moe = int(np.sum(trace.plan_idx == 1))
+    assert abs(n_moe / len(trace) - 0.3) < 0.05
+    r = simulate(mixed, trace, "plan_aware")
+    assert r.completed == len(trace) and r.lost == 0
+    edge = r.per_worker["w0-edge"]
+    assert edge["served_by_plan"].get("moe", 0) == 0
+    assert edge["served"] > 0                 # edge still earns its keep
+    moe_served = sum(w["served_by_plan"].get("moe", 0)
+                     for w in r.per_worker.values())
+    assert moe_served == n_moe
+    # batches never mix plans, so per-plan counts are exact per worker
+    for w in r.per_worker.values():
+        assert sum(w["served_by_plan"].values()) == w["served"]
+
+
+def test_mixed_plan_trace_rng_is_backwards_compatible():
+    """Adding ``plan_mix`` must not perturb the single-plan rng stream:
+    the committed BENCH_fleet payload depends on these draws being
+    bit-identical to what PR 6 recorded."""
+    base = make_trace(2000, _rate(), seed=7)
+    mixed = make_trace(2000, _rate(), seed=7,
+                       plan_mix={"cnn": 0.5, "moe": 0.5})
+    np.testing.assert_array_equal(base.arrivals, mixed.arrivals)
+    np.testing.assert_array_equal(base.tier_idx, mixed.tier_idx)
+    np.testing.assert_array_equal(base.deadlines, mixed.deadlines)
+    assert base.plan_idx is None and mixed.plan_idx is not None
+    with pytest.raises(ValueError, match="sum to 1"):
+        make_trace(10, _rate(), plan_mix={"cnn": 0.7, "moe": 0.2})
+
+
 # ---------------------------------------------------------------------------
 # reduced-scale SLO acceptance — the CI `fleet` job (-m fleet)
 # ---------------------------------------------------------------------------

@@ -1,14 +1,25 @@
 """Golden regression for the serialized DeploymentPlan: the JSON plan
 artifact is a cross-machine deployment contract, so its schema must not
 drift silently.  If a change is *intentional*, bump
-``deploy.PLAN_SCHEMA_VERSION`` and regenerate the fixture:
+``deploy.PLAN_SCHEMA_VERSION`` and regenerate the fixtures:
 
     PYTHONPATH=src python tests/test_plan_golden.py
 
 (mirrors the ``SWEEP_SCHEMA_VERSION`` / synth_golden.json pattern).
-The golden plan is hand-constructed with pinned demand numbers — it
-does not depend on the sweep or the fitted models, so it only moves
-when the schema itself does."""
+The golden plans are hand-constructed with pinned demand numbers — they
+do not depend on the sweep or the fitted models, so they only move when
+the schema itself does.
+
+Three fixtures:
+
+* ``plan_golden.json``      — the v2 CNN plan (regenerated on bumps)
+* ``plan_moe_golden.json``  — the v2 MoE plan (regenerated on bumps)
+* ``plan_v1_golden.json``   — the **frozen** v1 payload; never
+  regenerated.  The upgrade tests pin that a v1 plan loads into the
+  exact same in-memory plan as the v2 fixture: same dataclass equality,
+  same ``plan_config``, same per-layer executable-cache keys — the
+  "v1 plans load unchanged" contract.
+"""
 
 import json
 from pathlib import Path
@@ -19,14 +30,18 @@ from repro.core import deploy
 from repro.core.allocate import DeviceProfile
 from repro.core.cnn import CNNConfig, ConvLayerSpec
 from repro.core.deploy import DeploymentPlan, LayerAssignment
+from repro.runtime.compiled import CompiledCNN
+from repro.runtime.workloads import MoELayerSpec, MoEWorkloadSpec
 
 GOLDEN = Path(__file__).parent / "golden" / "plan_golden.json"
+GOLDEN_V1 = Path(__file__).parent / "golden" / "plan_v1_golden.json"
+GOLDEN_MOE = Path(__file__).parent / "golden" / "plan_moe_golden.json"
 
 
 def _golden_plan() -> DeploymentPlan:
-    """A fully-populated plan with pinned values covering every schema
-    field: custom device, two layers (one block-pinned), fractional
-    demand, quant_error set, embedded network config."""
+    """A fully-populated CNN plan with pinned values covering every
+    schema field: custom device, two layers (one block-pinned),
+    fractional demand, quant_error set, embedded network config."""
     device = DeviceProfile(
         name="golden-dev", cost=0.75,
         budgets={"hbm_bytes": 1000.0, "mxu_cost": 2000.0,
@@ -56,25 +71,75 @@ def _golden_plan() -> DeploymentPlan:
         convs_per_step=1.6, feasible=True, quant_error=0.0421, cnn=cnn)
 
 
+def _golden_moe_plan() -> DeploymentPlan:
+    """A pinned MoE plan covering the non-CNN workload envelope: two
+    layers at different planned precisions, shared experts on one."""
+    device = DeviceProfile(
+        name="golden-dev", cost=0.75,
+        budgets={"hbm_bytes": 1000.0, "mxu_cost": 2000.0,
+                 "vmem_bytes": 4096.0, "vpu_ops": 500.0},
+        description="pinned fixture device")
+    layers = (
+        LayerAssignment(index=0, block="moe_ffn", data_bits=8,
+                        coeff_bits=8, calls=16,
+                        demand={"hbm_bytes": 60.5, "mxu_cost": 800.0,
+                                "vmem_bytes": 512.0, "vpu_ops": 96.0}),
+        LayerAssignment(index=1, block="moe_ffn", data_bits=6,
+                        coeff_bits=4, calls=16,
+                        demand={"hbm_bytes": 30.25, "mxu_cost": 800.0,
+                                "vmem_bytes": 512.0, "vpu_ops": 96.0}),
+    )
+    workload = MoEWorkloadSpec(
+        layers=(
+            MoELayerSpec(d_ff_expert=16, num_experts=4, top_k=2,
+                         data_bits=8, coeff_bits=8,
+                         n_shared_experts=1, capacity_factor=2.0),
+            MoELayerSpec(d_ff_expert=16, num_experts=4, top_k=2,
+                         data_bits=6, coeff_bits=4,
+                         capacity_factor=1.5),
+        ), d_model=8, seq_len=8, act="silu", mlp_gated=True)
+    return DeploymentPlan(
+        device=device, target=0.8, layers=layers,
+        demand={"hbm_bytes": 90.75, "mxu_cost": 1600.0,
+                "vmem_bytes": 512.0, "vpu_ops": 192.0},
+        usage_pct={"hbm_bytes": 9.075, "mxu_cost": 80.0,
+                   "vmem_bytes": 12.5, "vpu_ops": 38.4},
+        convs_per_step=8.0, feasible=True, quant_error=0.0123,
+        cnn=None, workload=workload)
+
+
 def test_golden_fixture_matches_schema_version():
     assert json.loads(GOLDEN.read_text())["version"] \
         == deploy.PLAN_SCHEMA_VERSION, (
         "PLAN_SCHEMA_VERSION changed — regenerate the golden fixture "
         "(PYTHONPATH=src python tests/test_plan_golden.py)")
+    assert json.loads(GOLDEN_MOE.read_text())["version"] \
+        == deploy.PLAN_SCHEMA_VERSION
 
 
 def test_plan_serialization_matches_golden():
-    """to_json of the pinned plan must byte-match the fixture: any field
-    added, renamed, or re-typed is a schema change and needs a
+    """to_json of the pinned plans must byte-match the fixtures: any
+    field added, renamed, or re-typed is a schema change and needs a
     PLAN_SCHEMA_VERSION bump + fixture regeneration."""
     assert _golden_plan().to_json() + "\n" == GOLDEN.read_text(), (
         "serialized plan drifted from tests/golden/plan_golden.json — "
+        "if intentional, bump PLAN_SCHEMA_VERSION and regenerate")
+    assert _golden_moe_plan().to_json() + "\n" == GOLDEN_MOE.read_text(), (
+        "serialized MoE plan drifted from plan_moe_golden.json — "
         "if intentional, bump PLAN_SCHEMA_VERSION and regenerate")
 
 
 def test_golden_fixture_round_trips():
     plan = DeploymentPlan.from_json(GOLDEN.read_text())
     assert plan == _golden_plan()
+    assert DeploymentPlan.from_json(plan.to_json()) == plan
+
+
+def test_moe_golden_round_trips():
+    plan = DeploymentPlan.from_json(GOLDEN_MOE.read_text())
+    assert plan == _golden_moe_plan()
+    assert plan.cnn is None
+    assert plan.workload.kind == "moe"
     assert DeploymentPlan.from_json(plan.to_json()) == plan
 
 
@@ -87,6 +152,48 @@ def test_wrong_schema_version_rejected():
         DeploymentPlan.from_json("{}")      # pre-versioning payload
 
 
-if __name__ == "__main__":                  # regenerate the fixture
+# ---------------------------------------------------------------------------
+# v1 → v2 upgrade: the frozen v1 payload must load bit-identically
+# ---------------------------------------------------------------------------
+
+def test_v1_fixture_is_frozen_at_version_1():
+    assert json.loads(GOLDEN_V1.read_text())["version"] == 1, (
+        "plan_v1_golden.json is the frozen v1 upgrade input — it must "
+        "NEVER be regenerated")
+
+
+def test_v1_plan_upgrades_to_identical_plan():
+    """The whole back-compat contract in one assert: loading the frozen
+    v1 payload yields the same in-memory plan as the pinned v2 plan —
+    every field, including the embedded CNNConfig (``workload`` stays
+    None; CNN plans keep the legacy ``cnn`` field either way)."""
+    v1 = DeploymentPlan.from_json(GOLDEN_V1.read_text())
+    assert v1 == _golden_plan()
+    assert v1.workload is None and v1.cnn is not None
+    # re-serializing writes the *current* schema
+    assert json.loads(v1.to_json())["version"] == deploy.PLAN_SCHEMA_VERSION
+    assert DeploymentPlan.from_json(v1.to_json()) == v1
+
+
+def test_v1_plan_same_plan_config_and_cache_keys():
+    """An upgraded v1 plan must compile to byte-identical executables:
+    same ``plan_config`` output and same per-layer ``ExecutableCache``
+    keys as the v2 plan (so a fleet mid-upgrade shares its cache)."""
+    v1 = DeploymentPlan.from_json(GOLDEN_V1.read_text())
+    v2 = DeploymentPlan.from_json(GOLDEN.read_text())
+    assert deploy.plan_config(v1) == deploy.plan_config(v2)
+    c1 = CompiledCNN.from_plan(v1, max_batch=2, warmup=False)
+    c2 = CompiledCNN.from_plan(v2, max_batch=2, warmup=False)
+    keys1 = [c1._layer_key(i, b)
+             for i in range(c1.num_layers) for b in c1.buckets]
+    keys2 = [c2._layer_key(i, b)
+             for i in range(c2.num_layers) for b in c2.buckets]
+    assert keys1 == keys2
+
+
+if __name__ == "__main__":                  # regenerate the v2 fixtures
     GOLDEN.write_text(_golden_plan().to_json() + "\n")
-    print(f"wrote {GOLDEN} at schema v{deploy.PLAN_SCHEMA_VERSION}")
+    GOLDEN_MOE.write_text(_golden_moe_plan().to_json() + "\n")
+    print(f"wrote {GOLDEN} and {GOLDEN_MOE} at schema "
+          f"v{deploy.PLAN_SCHEMA_VERSION} "
+          f"({GOLDEN_V1} stays frozen at v1)")
