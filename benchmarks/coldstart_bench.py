@@ -1,0 +1,119 @@
+"""Cold vs warm restart through the persistent executable cache.
+
+Both runs build the same plan-driven serving engine over the same
+on-disk cache directory and time **cold-start-to-first-served**: from
+"process start" (engine construction begins) to the first request
+coming back served.  What differs is the disk state:
+
+  cold   the cache directory is empty — every batch bucket of every
+      layer is XLA-compiled live, then persisted (``cache_disk_store``)
+  warm   a *new* ``PersistentExecutableCache`` instance over the now
+      populated directory — every lookup deserializes a stored
+      executable (``cache_disk_hit``), and the compile counter must
+      stay at **zero**
+
+Each run constructs a fresh ``CompiledCNN`` with fresh per-layer jit
+closures, so JAX's in-process jit cache cannot leak compilations
+across runs — the cold compile cost is real, and the warm run's zero
+compiles is the persistence layer working, not Python-level caching.
+
+``run`` records ``BENCH_coldstart.json`` (uploaded by the CI sweep
+job, gated by ``scripts/check_coldstart_bench.py``); the headline is
+warm restart reaching first-served ≥ 3× faster than cold with zero
+recompiles.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import DEFAULT_SEED, add_seed_argument, emit
+from repro.core import deploy
+from repro.core.cnn import fitted_block_models, quickstart_cnn_config
+from repro.ops import PersistentExecutableCache
+from repro.serve import CNNEngine, CNNServeConfig, ImageRequest
+
+MAX_BATCH = 8                          # bucket ladder 1/2/4/8 per layer
+WARM_RUNS = 3                          # median over repeated warm starts
+JSON_PATH = "BENCH_coldstart.json"
+
+
+def _launch(plan, cache_dir, seed) -> dict:
+    """One 'process launch': build the engine through a fresh cache
+    instance over ``cache_dir`` and serve one request; returns the
+    cold-start-to-first-served wall time and the cache counters."""
+    cache = PersistentExecutableCache(cache_dir)
+    t0 = time.perf_counter()
+    engine = CNNEngine.from_plan(
+        plan, serve_cfg=CNNServeConfig(max_batch=MAX_BATCH),
+        exec_cache=cache)
+    img = engine.compiled.sample_inputs(1, seed=seed)[0]
+    req = ImageRequest(image=img, request_id=0)
+    assert engine.submit(req)
+    served = engine.step()
+    jax.block_until_ready(req.output)
+    elapsed = time.perf_counter() - t0
+    assert served == 1 and req.done
+    s = cache.stats()
+    return {"to_first_served_s": elapsed, "compiles": s["compiles"],
+            "disk_hits": s["disk_hits"], "disk_stores": s["disk_stores"]}
+
+
+def run(json_path: str = JSON_PATH, seed: int = DEFAULT_SEED) -> dict:
+    cfg = quickstart_cnn_config()
+    plan = deploy.plan_deployment(cfg, fitted_block_models(), target=0.8,
+                                  on_infeasible="fallback")
+    root = Path(tempfile.mkdtemp(prefix="coldstart_bench_"))
+    try:
+        cache_dir = root / "exe"
+        cold = _launch(plan, cache_dir, seed)
+        warms = [_launch(plan, cache_dir, seed) for _ in range(WARM_RUNS)]
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    warms.sort(key=lambda r: r["to_first_served_s"])
+    warm = warms[len(warms) // 2]
+    speedup = cold["to_first_served_s"] / warm["to_first_served_s"]
+    emit("coldstart/cold", cold["to_first_served_s"] * 1e6,
+         f"compiles={cold['compiles']}")
+    emit("coldstart/warm", warm["to_first_served_s"] * 1e6,
+         f"compiles={warm['compiles']};disk_hits={warm['disk_hits']}")
+    emit("coldstart/speedup", 0.0, f"{speedup:.2f}x")
+
+    payload = {
+        "bench": "coldstart",
+        "schema": 1,
+        "seed": seed,
+        "max_batch": MAX_BATCH,
+        "warm_runs": WARM_RUNS,
+        "layers": len(plan.layers),
+        "device_count": len(jax.devices()),
+        "jax_version": jax.__version__,
+        "cold": cold,
+        "warm": warm,
+        "warm_all_s": [r["to_first_served_s"] for r in warms],
+        # acceptance: warm restart reaches first-served ≥ 3× faster
+        # than cold and never touches the compiler
+        "speedup": speedup,
+        "warm_compiles": warm["compiles"],
+    }
+    Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=JSON_PATH,
+                    help=f"output path (default {JSON_PATH})")
+    add_seed_argument(ap)
+    a = ap.parse_args()
+    run(a.json, seed=a.seed)

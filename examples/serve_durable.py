@@ -1,0 +1,81 @@
+"""Durable serving state end to end: plan once into an on-disk
+``PlanStore``, compile once into a ``PersistentExecutableCache``, then
+restart — the second "process" loads the stored plan and deserializes
+every AOT executable instead of recompiling (zero compiles), while a
+``JsonlTracker`` records the full register → serve → retire lifecycle.
+
+    PYTHONPATH=src python examples/serve_durable.py
+"""
+
+import asyncio
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import deploy
+from repro.core.cnn import CNNConfig, ConvLayerSpec, fitted_block_models
+from repro.ops import (JsonlTracker, PersistentExecutableCache, PlanStore,
+                       read_events)
+from repro.serve import AsyncCNNGateway, AsyncServeConfig
+
+CFG = CNNConfig(layers=(
+    ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
+    ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
+), img_h=16, img_w=64)
+
+
+async def launch(root: Path, label: str) -> None:
+    """One serving 'process': resolve the plan through the store, build
+    the gateway over the persistent cache, serve, retire, report."""
+    store = PlanStore(root / "plans")
+    if "cnn-demo" in store:
+        plan = store.load("cnn-demo")
+        print(f"[{label}] plan loaded from store")
+    else:
+        plan = deploy.plan_deployment(CFG, fitted_block_models(),
+                                      target=0.8, on_infeasible="fallback")
+        store.save(plan, "cnn-demo")
+        print(f"[{label}] plan computed and saved")
+
+    cache = PersistentExecutableCache(root / "exe")
+    tracker = JsonlTracker(root / f"{label}.jsonl")
+    gw = AsyncCNNGateway.from_plan(
+        plan, AsyncServeConfig(max_batch=4, max_pending=32),
+        plan_id="cnn-demo", exec_cache=cache, tracker=tracker)
+
+    compiled = gw.plans["cnn-demo"].compiled
+    imgs = compiled.sample_inputs(8)
+    async with gw:
+        futs = [await gw.submit(img, plan_id="cnn-demo") for img in imgs]
+        outs = await asyncio.gather(*futs)
+        # live retire: admission closes, in-flight requests finish
+        served = await gw.retire_plan("cnn-demo")
+    assert all(np.asarray(o).shape == outs[0].shape for o in outs)
+
+    s = cache.stats()
+    print(f"[{label}] served {served} then retired | compiles="
+          f"{s['compiles']} disk_hits={s['disk_hits']} "
+          f"disk_stores={s['disk_stores']}")
+    tracker.close()
+    events = [e["event"] for e in read_events(tracker.path)]
+    assert events.index("plan_registered") < events.index("plan_retired")
+    print(f"[{label}] tracker: {len(events)} events "
+          f"({' → '.join(dict.fromkeys(events))})")
+    if label == "warm":
+        assert s["compiles"] == 0, "warm restart must not recompile"
+        print("[warm] zero recompiles: every executable deserialized")
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp)
+        asyncio.run(launch(root, "cold"))
+        asyncio.run(launch(root, "warm"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Acceptance gate for ``BENCH_coldstart.json`` (persistent executable
+cache, cold vs warm restart).
+
+A warm restart over a populated cache directory must actually skip the
+compiler, not merely shave it:
+
+  * ``warm_compiles == 0`` — every executable deserializes from disk;
+    a single live compile means a key or fingerprint regressed;
+  * ``speedup >= 3.0`` — cold-start-to-first-served must be ≥ 3×
+    faster warm than cold (CPU XLA compiles of the quickstart ladder
+    take seconds; deserialization takes tens of milliseconds);
+  * the warm run's ``disk_hits`` covers what the cold run compiled —
+    a warm start that silently recompiled *and* re-stored would show
+    hits < stores.
+
+Run after regenerating the bench (CI sweep job does both):
+
+    python benchmarks/coldstart_bench.py
+    python scripts/check_coldstart_bench.py [BENCH_coldstart.json]
+
+Exits non-zero with a verdict per gate when the artifact misses a bar.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+MIN_SPEEDUP = 3.0
+
+
+def check(path: str | Path) -> int:
+    payload = json.loads(Path(path).read_text())
+    cold, warm = payload.get("cold"), payload.get("warm")
+    if not cold or not warm:
+        print(f"FAIL {path}: missing cold/warm results")
+        return 1
+    failures = 0
+
+    speedup = payload["speedup"]
+    ok = speedup >= MIN_SPEEDUP
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} speedup "
+          f"{speedup:.2f}x (cold {cold['to_first_served_s']:.3f}s → "
+          f"warm {warm['to_first_served_s']:.3f}s; need ≥ "
+          f"{MIN_SPEEDUP:g}x)")
+
+    ok = warm["compiles"] == 0
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} warm compiles "
+          f"{warm['compiles']} (must be 0: every executable "
+          f"deserialized)")
+
+    ok = warm["disk_hits"] >= cold["disk_stores"] > 0
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} warm disk_hits "
+          f"{warm['disk_hits']} covers cold disk_stores "
+          f"{cold['disk_stores']}")
+
+    if failures:
+        print(f"FAIL {path}: {failures} gate(s) missed")
+        return 1
+    print(f"ok   {path}: warm restart serves from disk "
+          f"({speedup:.1f}x faster to first served)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1
+                   else "BENCH_coldstart.json"))

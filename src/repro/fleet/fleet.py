@@ -98,7 +98,8 @@ class Fleet:
     def __init__(self, workers: Sequence[FleetWorker],
                  router: RouterLike = "plan_aware", *,
                  max_retries: int = 2,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracker=None):
         if not workers:
             raise ValueError("a fleet needs at least one worker")
         ids = [w.worker_id for w in workers]
@@ -112,6 +113,9 @@ class Fleet:
         self.router: Router = get_router(router)
         self.max_retries = max_retries
         self.clock = clock
+        # ops telemetry sink (repro.ops.Tracker): worker lifecycle
+        # events (ejected/probed/readmitted), plan rollout/retire
+        self.tracker = tracker
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._tasks: set = set()
         self._next_id = 0
@@ -124,6 +128,10 @@ class Fleet:
         self.retried = 0
         self.worker_failures = 0
         self.drains = 0
+
+    def _track(self, event: str, **fields) -> None:
+        if self.tracker is not None:
+            self.tracker.log_event(event, **fields)
 
     # -- lifecycle --------------------------------------------------------
     def _ensure_started(self) -> None:
@@ -284,6 +292,8 @@ class Fleet:
         worker = self.workers[view.worker_id]
         if worker.health.ejected:
             worker.health.begin_probe()   # this request is the canary
+            self._track("worker_probe", worker_id=worker.worker_id,
+                        probes=worker.health.probes)
         return worker
 
     def _attach(self, fr: FleetRequest, worker: FleetWorker,
@@ -356,7 +366,11 @@ class Fleet:
             return
         exc = wfut.exception()
         if exc is None:
+            was_ejected = worker.health.ejected
             worker.health.note_success()
+            if was_ejected:
+                self._track("worker_readmitted",
+                            worker_id=worker.worker_id)
             self.served += 1
             if not fr.future.done():
                 fr.future.set_result(wfut.result())
@@ -369,7 +383,12 @@ class Fleet:
                 fr.future.set_exception(exc)
         else:
             self.worker_failures += 1
+            was_ejected = worker.health.ejected
             worker.health.note_failure(self.clock())
+            if worker.health.ejected and not was_ejected:
+                self._track("worker_ejected",
+                            worker_id=worker.worker_id,
+                            ejections=worker.health.ejections)
             if fr.attempts <= self.max_retries and not fr.future.done():
                 self.retried += 1
                 self._spawn(self._route_and_admit(
@@ -396,6 +415,7 @@ class Fleet:
         if not worker.draining:
             worker.draining = True
             self.drains += 1
+            self._track("worker_draining", worker_id=worker_id)
             worker.gateway.extract_queued()   # futures cancel → re-route
         if worker.outstanding:
             ev = asyncio.Event()
@@ -405,6 +425,79 @@ class Fleet:
             finally:
                 worker._idle_waiters.remove(ev)
         return worker
+
+    # -- live plan reload -------------------------------------------------
+    def _target_workers(self, worker_ids: Optional[Sequence[str]]
+                        ) -> Dict[str, FleetWorker]:
+        if worker_ids is None:
+            return dict(self.workers)
+        targets = {}
+        for wid in worker_ids:
+            try:
+                targets[wid] = self.workers[wid]
+            except KeyError:
+                raise FleetError(
+                    f"unknown worker {wid!r}; fleet has: "
+                    f"{sorted(self.workers)}") from None
+        return targets
+
+    async def rollout(self, plan, plan_id: str, *,
+                      worker_ids: Optional[Sequence[str]] = None,
+                      params=None, key=None) -> Dict[str, str]:
+        """Register ``plan`` on live workers without pausing serving.
+
+        Each target worker compiles the plan **off the event loop**
+        (``run_in_executor``) into its gateway's executable cache —
+        with a ``PersistentExecutableCache`` this is a deserialization,
+        not a compile storm — and then registers it between dispatches.
+        Workers already serving ``plan_id`` are skipped (idempotent
+        rollouts).  Workers roll sequentially, so a broken plan fails
+        on the first worker with the rest untouched.  Returns
+        ``{worker_id: plan_id}`` for the workers that registered."""
+        self._ensure_started()
+        targets = self._target_workers(worker_ids)
+        registered: Dict[str, str] = {}
+        for wid, worker in targets.items():
+            gw = worker.gateway
+            if plan_id in gw.plans:
+                continue
+            from repro.runtime.workloads import compile_plan
+            compiled = await self._loop.run_in_executor(
+                None, lambda gw=gw: compile_plan(
+                    plan, params=params, key=key,
+                    max_batch=gw.cfg.max_batch,
+                    warmup=gw.cfg.aot_warmup,
+                    exec_cache=gw.exec_cache))
+            gw.register_plan(plan, plan_id=plan_id, compiled=compiled)
+            registered[wid] = plan_id
+            self._track("plan_rollout", plan_id=plan_id, worker_id=wid)
+        return registered
+
+    async def retire_plan(self, plan_id: str, *,
+                          worker_ids: Optional[Sequence[str]] = None
+                          ) -> int:
+        """Retire ``plan_id`` fleet-wide without dropping in-flight
+        requests.  Two phases: first **every** target gateway closes
+        admission for the plan (``begin_retire`` — the routers stop
+        seeing it at once, so no re-route can land on a copy that is
+        about to vanish), then each gateway's ``retire_plan`` drains
+        its queued + in-flight requests for the plan to completion.
+        Returns the total requests the plan served across the fleet.
+        Workers that never hosted the plan are skipped."""
+        self._ensure_started()
+        targets = {wid: w for wid, w in
+                   self._target_workers(worker_ids).items()
+                   if plan_id in w.gateway.plans
+                   or plan_id in getattr(w.gateway, "retired_plans", {})}
+        for worker in targets.values():       # phase 1: stop routing
+            if plan_id in worker.gateway.plans:
+                worker.gateway.begin_retire(plan_id)
+        total = 0
+        for worker in targets.values():       # phase 2: drain + evict
+            total += await worker.gateway.retire_plan(plan_id)
+        self._track("plan_retired_fleet", plan_id=plan_id,
+                    workers=sorted(targets), served=total)
+        return total
 
     # -- observability ----------------------------------------------------
     def stats(self) -> dict:

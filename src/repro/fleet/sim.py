@@ -212,6 +212,11 @@ class SimResult:
     late_rerouted: int
     per_tier: Dict[str, Dict[str, float]]
     per_worker: Dict[str, Dict[str, object]]
+    # live plan retirement (``retire_at``/``retire_plan_id``): arrivals
+    # for the retired plan after routing closed — refused at the door,
+    # not lost (every already-admitted request still completes)
+    refused_retired: int = 0
+    retired_plan: Optional[str] = None
 
     @property
     def all_slos_met(self) -> bool:
@@ -231,13 +236,17 @@ class SimResult:
             "per_tier": self.per_tier,
             "per_worker": self.per_worker,
             "all_slos_met": self.all_slos_met,
+            "refused_retired": self.refused_retired,
+            "retired_plan": self.retired_plan,
         }
 
 
 def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
              router: RouterLike = "plan_aware", *,
              drain_at: Optional[float] = None,
-             drain_worker: Optional[str] = None) -> SimResult:
+             drain_worker: Optional[str] = None,
+             retire_at: Optional[float] = None,
+             retire_plan_id: Optional[str] = None) -> SimResult:
     """Replay ``trace`` through a simulated fleet under ``router``.
 
     ``drain_at``/``drain_worker`` schedule one mid-trace graceful
@@ -245,6 +254,14 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
     requests re-enter routing (original arrival times and deadlines —
     the detour is on the request's own clock), and its in-flight batch
     finishes normally.  Fully deterministic for a fixed trace.
+
+    ``retire_at``/``retire_plan_id`` schedule one mid-trace live plan
+    retirement — the virtual twin of ``Fleet.retire_plan``: at that
+    virtual time the plan disappears from every worker's routable set
+    at once (phase 1), so later arrivals for it are *refused* (counted
+    in ``refused_retired``, not ``lost``) while every request admitted
+    before the cut still dispatches and completes normally (phase 2's
+    drain) — zero admitted requests lost.
     """
     rtr: Router = get_router(router)
     workers = [_SimWorker(s) for s in sorted(worker_specs,
@@ -253,6 +270,8 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         raise ValueError("duplicate sim worker ids")
     if (drain_at is None) != (drain_worker is None):
         raise ValueError("drain_at and drain_worker go together")
+    if (retire_at is None) != (retire_plan_id is None):
+        raise ValueError("retire_at and retire_plan_id go together")
     by_id = {w.spec.worker_id: w for w in workers}
     views = [w.view for w in workers]
 
@@ -271,6 +290,7 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
     rerouted_mask = np.zeros(n, dtype=bool)
     lost = 0
     rerouted = 0
+    refused_retired = 0
 
     # completion events only — arrivals stream from the sorted array
     events: List[Tuple[float, int, int]] = []   # (time, seq, worker_idx)
@@ -326,8 +346,34 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
 
     drain_time = math.inf if drain_at is None else float(drain_at)
     drained = False
+    retire_time = math.inf if retire_at is None else float(retire_at)
+    retired = False
+
+    def note_unroutable(req: int) -> None:
+        """An arrival no worker takes: a request for the retired plan
+        was *refused* at the closed door; anything else is lost."""
+        nonlocal lost, refused_retired
+        if retired and plan_names[plan_arr[req]] == retire_plan_id:
+            refused_retired += 1
+        else:
+            lost += 1
+
+    def maybe_retire(now: float) -> None:
+        """Phase 1 of ``Fleet.retire_plan`` on the virtual clock: the
+        plan leaves every routable set at once.  Queued and in-flight
+        requests for it are untouched — they dispatch through the
+        normal batch path (phase 2's drain)."""
+        nonlocal retired
+        if retired or now < retire_time:
+            return
+        retired = True
+        for w in workers:
+            w.view.plan_ids = frozenset(
+                p for p in w.view.plan_ids if p != retire_plan_id)
 
     def maybe_drain(now: float) -> None:
+        # an evicted request failing re-route is *lost* even when its
+        # plan retired — it had been admitted, unlike a fresh arrival
         nonlocal drained, rerouted, lost
         if drained or now < drain_time:
             return
@@ -352,6 +398,7 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         if events and events[0][0] <= next_arrival:
             t, _, k = heapq.heappop(events)
             now = t
+            maybe_retire(now)
             maybe_drain(now)
             w = workers[k]
             batch = w.busy
@@ -369,11 +416,13 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
             start_batch(w, now)
         else:
             now = next_arrival
+            maybe_retire(now)
             maybe_drain(now)
             if not route(i, now, i):
-                lost += 1
+                note_unroutable(i)
             i += 1
-    # a drain scheduled after the last event still happens (idle drain)
+    # a drain/retire scheduled after the last event still happens
+    maybe_retire(retire_time if retire_time is not math.inf else now)
     maybe_drain(drain_time if drain_time is not math.inf else now)
 
     completed = int(np.count_nonzero(~np.isnan(lat)))
@@ -419,4 +468,5 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         duration_s=duration, completed=completed, lost=lost,
         rerouted=rerouted, late=int(np.count_nonzero(late_mask)),
         late_rerouted=int(np.count_nonzero(late_mask & rerouted_mask)),
-        per_tier=per_tier, per_worker=per_worker)
+        per_tier=per_tier, per_worker=per_worker,
+        refused_retired=refused_retired, retired_plan=retire_plan_id)

@@ -70,7 +70,13 @@ class FleetWorker:
 
     @property
     def plan_ids(self):
-        """Plans this worker can serve (live view of its registry)."""
+        """Plans this worker can serve (live view of its registry).
+        Prefers the gateway's ``routable_plans`` so a plan being
+        retired disappears from routing the moment its admission
+        closes, not when its last in-flight request finishes."""
+        routable = getattr(self.gateway, "routable_plans", None)
+        if routable is not None:
+            return frozenset(routable)
         return frozenset(self.gateway.plans)
 
     @property

@@ -63,6 +63,69 @@ def _percentiles(lat_s):
     return {"p50_ms": p[0], "p95_ms": p[1], "p99_ms": p[2]}
 
 
+# -- durable serving state (repro.ops) flags --------------------------------
+def _ops_cache(args):
+    """``--cache-dir`` → a ``PersistentExecutableCache`` every compile
+    in this process writes through; None without the flag (the callers
+    fall back to an in-memory cache)."""
+    if not getattr(args, "cache_dir", None):
+        return None
+    from repro.ops import PersistentExecutableCache
+    cache = PersistentExecutableCache(args.cache_dir)
+    print(f"[ops] persistent executable cache at {args.cache_dir!r}")
+    return cache
+
+
+def _ops_tracker(args):
+    """``--metrics-out`` → a ``JsonlTracker``; None without the flag."""
+    if not getattr(args, "metrics_out", None):
+        return None
+    from repro.ops import JsonlTracker
+    tracker = JsonlTracker(args.metrics_out)
+    print(f"[ops] metrics JSONL → {args.metrics_out!r}")
+    return tracker
+
+
+def _ops_sampler(tracker, sources, interval_s=0.5):
+    if tracker is None:
+        return None
+    from repro.ops import StatsSampler
+    return StatsSampler(tracker, sources, interval_s=interval_s)
+
+
+def _ops_finish(tracker, sampler=None, cache=None):
+    """Flush ops state at the end of a run and say where it went."""
+    if sampler is not None:
+        sampler.close()
+    if tracker is not None:
+        tracker.close()
+        print(f"[ops] metrics: {tracker.recorded} records "
+              f"({tracker.dropped} dropped) → {tracker.path}")
+    if cache is not None:
+        s = cache.stats()
+        print(f"[ops] exec cache: {s['compiles']} compiled, "
+              f"{s['disk_hits']} loaded from disk, "
+              f"{s['disk_stores']} persisted")
+
+
+def _plan_from_store(args, workload: str, compute):
+    """Resolve the plan through ``--plan-store`` when set: serve the
+    stored plan under ``<workload>-<device>`` if present, otherwise run
+    ``compute()`` and persist the result — the next launch loads it."""
+    from repro.ops import PlanStore
+    store = PlanStore(args.plan_store)
+    store_id = f"{workload}-{args.device}"
+    if store_id in store:
+        plan = store.load(store_id)
+        print(f"[serve] loaded plan {store_id!r} from store "
+              f"{args.plan_store!r}")
+        return plan
+    plan = compute()
+    store.save(plan, store_id)
+    print(f"[serve] plan {store_id!r} saved to store {args.plan_store!r}")
+    return plan
+
+
 def run_lm(args) -> None:
     from repro.configs import smoke_config
     from repro.models import build_model
@@ -75,6 +138,9 @@ def run_lm(args) -> None:
         max_batch=args.max_batch, max_len=args.prompt_len + args.new_tokens
         + 8, max_new_tokens=args.new_tokens))
 
+    tracker = _ops_tracker(args)
+    sampler = _ops_sampler(
+        tracker, {"engine": lambda: engine.snapshot().asdict()})
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
                                              args.prompt_len)),
@@ -87,6 +153,7 @@ def run_lm(args) -> None:
           f"({total/dt:.1f} tok/s on {len(jax.devices())} host device(s))")
     for r in reqs[:3]:
         print(f"  req{r.request_id}: {r.out_tokens[:12]}...")
+    _ops_finish(tracker, sampler)
 
 
 def _cnn_plan(args):
@@ -95,16 +162,21 @@ def _cnn_plan(args):
     from repro.core import allocate, deploy
     from repro.core.cnn import fitted_block_models, quickstart_cnn_config
 
+    def compute():
+        cfg = quickstart_cnn_config()
+        bm = fitted_block_models()
+        device = allocate.get_device(args.device)
+        return deploy.plan_deployment(cfg, bm, device, target=0.8,
+                                      on_infeasible="fallback")
+
     if args.plan:
         plan = runtime.load_plan(args.plan)
         print(f"[serve] loaded plan artifact {args.plan!r} "
               f"(planned for device {plan.device.name})")
+    elif args.plan_store:
+        plan = _plan_from_store(args, "cnn", compute)
     else:
-        cfg = quickstart_cnn_config()
-        bm = fitted_block_models()
-        device = allocate.get_device(args.device)
-        plan = deploy.plan_deployment(cfg, bm, device, target=0.8,
-                                      on_infeasible="fallback")
+        plan = compute()
     if args.save_plan:                 # also re-exports a loaded --plan
         runtime.save_plan(plan, args.save_plan)
         print(f"[serve] plan artifact saved to {args.save_plan!r}")
@@ -123,15 +195,20 @@ def _moe_plan(args):
     from repro.configs import smoke_config
     from repro.runtime import moe_workload_from_config, plan_moe_deployment
 
+    def compute():
+        spec = moe_workload_from_config(smoke_config(args.arch))
+        return plan_moe_deployment(spec, args.device, target=0.8,
+                                   on_infeasible="fallback")
+
     if args.plan:
         plan = runtime.load_plan(args.plan)
         print(f"[serve] loaded plan artifact {args.plan!r} "
               f"(planned for device {plan.device.name}, "
               f"workload {plan.workload.kind!r})")
+    elif args.plan_store:
+        plan = _plan_from_store(args, "moe", compute)
     else:
-        spec = moe_workload_from_config(smoke_config(args.arch))
-        plan = plan_moe_deployment(spec, args.device, target=0.8,
-                                   on_infeasible="fallback")
+        plan = compute()
     if args.save_plan:
         runtime.save_plan(plan, args.save_plan)
         print(f"[serve] plan artifact saved to {args.save_plan!r}")
@@ -149,9 +226,13 @@ def run_moe(args) -> None:
     from repro.serve import CNNEngine, CNNServeConfig, ImageRequest
 
     plan = _moe_plan(args)
+    cache = _ops_cache(args)
+    tracker = _ops_tracker(args)
     t0 = time.time()
     engine = CNNEngine.from_plan(
-        plan, serve_cfg=CNNServeConfig(max_batch=args.max_batch))
+        plan, serve_cfg=CNNServeConfig(max_batch=args.max_batch),
+        exec_cache=cache)
+    sampler = _ops_sampler(tracker, {"engine": engine.stats})
     compiled = engine.compiled
     print(f"[serve] AOT warmup: {len(compiled.buckets)} buckets × "
           f"{compiled.num_layers} MoE layers compiled in "
@@ -169,6 +250,7 @@ def run_moe(args) -> None:
           f"{stats['images_per_step']:.1f} blocks/step)")
     print(f"[serve] occupancy histogram: {stats['occupancy_hist']}  "
           f"bucket hits: {stats['bucket_hits']}")
+    _ops_finish(tracker, sampler, cache)
 
 
 def run_moe_async(args) -> None:
@@ -178,12 +260,15 @@ def run_moe_async(args) -> None:
                             DeadlineExpired, GatewayBacklog)
 
     plan = _moe_plan(args)
+    cache = _ops_cache(args)
+    tracker = _ops_tracker(args)
     t0 = time.time()
     gw = AsyncCNNGateway.from_plan(
         plan, AsyncServeConfig(max_batch=args.max_batch,
                                max_pending=args.max_pending,
                                max_inflight=args.max_inflight),
-        plan_id="moe")
+        plan_id="moe", exec_cache=cache, tracker=tracker)
+    sampler = _ops_sampler(tracker, {"gateway": gw.stats})
     compiled = gw.plans["moe"].compiled
     print(f"[serve] AOT warmup: {len(compiled.buckets)} buckets × "
           f"{compiled.num_layers} MoE layers in {time.time() - t0:.2f}s")
@@ -235,6 +320,7 @@ def run_moe_async(args) -> None:
     if pct:
         print(f"[serve] latency p50={pct['p50_ms']:.1f}ms "
               f"p95={pct['p95_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms")
+    _ops_finish(tracker, sampler, cache)
 
 
 def run_cnn(args) -> None:
@@ -242,11 +328,14 @@ def run_cnn(args) -> None:
     from repro.serve import CNNEngine, CNNServeConfig, ImageRequest
 
     plan = _cnn_plan(args)
+    cache = _ops_cache(args)
+    tracker = _ops_tracker(args)
     mesh = cnn_data_mesh() if args.shard else None
     t0 = time.time()
     engine = CNNEngine.from_plan(           # AOT-compiles every bucket
         plan, serve_cfg=CNNServeConfig(max_batch=args.max_batch),
-        mesh=mesh)
+        mesh=mesh, exec_cache=cache)
+    sampler = _ops_sampler(tracker, {"engine": engine.stats})
     print(f"[serve] AOT warmup: {len(engine.compiled.buckets)} buckets × "
           f"{len(engine.cfg.layers)} layers compiled in "
           f"{time.time() - t0:.2f}s (off the serving critical path)")
@@ -265,6 +354,7 @@ def run_cnn(args) -> None:
              else ""))
     print(f"[serve] occupancy histogram: {stats['occupancy_hist']}  "
           f"bucket hits: {stats['bucket_hits']}")
+    _ops_finish(tracker, sampler, cache)
 
 
 def run_cnn_async(args) -> None:
@@ -277,6 +367,8 @@ def run_cnn_async(args) -> None:
                              DeadlineExpired, GatewayBacklog)
 
     plan = _cnn_plan(args)
+    cache = _ops_cache(args)
+    tracker = _ops_tracker(args)
     mesh = cnn_data_mesh() if args.shard else None
     t0 = time.time()
     wait_budget = (args.wait_budget_ms / 1e3
@@ -286,7 +378,8 @@ def run_cnn_async(args) -> None:
                                max_pending=args.max_pending,
                                max_inflight=args.max_inflight,
                                wait_budget_s=wait_budget),
-        mesh=mesh)
+        mesh=mesh, exec_cache=cache, tracker=tracker)
+    sampler = _ops_sampler(tracker, {"gateway": gw.stats})
     compiled = gw.plans["plan0"].compiled
     print(f"[serve] AOT warmup: {len(compiled.buckets)} buckets × "
           f"{len(compiled.cfg.layers)} layers compiled in "
@@ -352,6 +445,7 @@ def run_cnn_async(args) -> None:
           f"{stats['service_rate']:.0f} images/s, est wait "
           f"{stats['est_wait'] * 1e3:.1f}ms, shed at bound: "
           f"{stats['shed']}")
+    _ops_finish(tracker, sampler, cache)
 
 
 def run_cnn_fleet(args) -> None:
@@ -369,6 +463,11 @@ def run_cnn_fleet(args) -> None:
     cfg = quickstart_cnn_config()
     bm = fitted_block_models()
     profiles = ("edge", "v5e", "v5p")
+    # one shared persistent cache across all profile gateways: the disk
+    # entries are content-addressed by layer key, so layers identical
+    # across the three per-profile plans deserialize once each
+    cache = _ops_cache(args)
+    tracker = _ops_tracker(args)
     t0 = time.time()
     workers = []
     for name in profiles:
@@ -377,7 +476,7 @@ def run_cnn_fleet(args) -> None:
         gw = AsyncCNNGateway.from_plan(
             plan, AsyncServeConfig(max_batch=args.max_batch,
                                    max_pending=args.max_pending),
-            plan_id="cnn")
+            plan_id="cnn", exec_cache=cache, tracker=tracker)
         workers.append(FleetWorker(f"{name}0", gw, name))
     print(f"[fleet] {len(workers)} workers "
           f"({', '.join(f'{w.worker_id}:{w.profile.name}' for w in workers)})"
@@ -405,7 +504,8 @@ def run_cnn_fleet(args) -> None:
     async def drive():
         per_tier = {t: [] for t in tiers}
         expired = 0
-        fleet = Fleet(workers, router=args.router)
+        fleet = Fleet(workers, router=args.router, tracker=tracker)
+        sampler = _ops_sampler(tracker, {"fleet": fleet.stats})
         async with fleet:
             t_start = time.monotonic()
 
@@ -436,6 +536,8 @@ def run_cnn_fleet(args) -> None:
                 tasks.append(drainer())
             await asyncio.gather(*tasks)
             stats = fleet.stats()
+        if sampler is not None:
+            sampler.close()
         return per_tier, expired, stats, time.monotonic() - t_start
 
     per_tier, expired, stats, wall = asyncio.run(drive())
@@ -455,6 +557,7 @@ def run_cnn_fleet(args) -> None:
         print(f"[fleet]   {wid:<8} profile={w['profile']:<5} "
               f"served={snap.get('served', 0):<5} "
               f"draining={w['draining']}")
+    _ops_finish(tracker, cache=cache)
 
 
 def main():
@@ -510,6 +613,19 @@ def main():
                          "through the trace (cnn --fleet)")
     ap.add_argument("--seed", type=int, default=1,
                     help="rng seed for generated traffic (cnn --fleet)")
+    ap.add_argument("--plan-store", default=None, metavar="DIR",
+                    help="durable plan repository (repro.ops.PlanStore): "
+                         "load the workload's plan from DIR if present, "
+                         "else plan once and save it (cnn/moe, all paths)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent executable cache "
+                         "(repro.ops.PersistentExecutableCache): warm "
+                         "restarts deserialize their AOT executables "
+                         "from DIR instead of recompiling (all paths)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="stream lifecycle events and periodic stats "
+                         "snapshots to FILE as JSON lines "
+                         "(repro.ops.JsonlTracker; all workloads)")
     args = ap.parse_args()
     if args.arch is None:
         args.arch = ("qwen3-moe-30b-a3b" if args.workload == "moe"

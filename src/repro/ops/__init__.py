@@ -1,0 +1,37 @@
+"""``repro.ops`` — durable serving state and ops telemetry.
+
+The serving stack (``repro.runtime`` → ``repro.serve`` → ``repro.fleet``)
+is fast once warm, but a process restart used to forget everything:
+every AOT executable recompiled, every registered plan re-planned.
+This package makes that state durable and observable:
+
+* ``PlanStore`` — crash-safe on-disk plan repository
+  (save/load/retire/quarantine, atomic writes);
+* ``PersistentExecutableCache`` — disk tier under
+  ``runtime.ExecutableCache`` via JAX AOT executable serialization, so
+  a warm restart deserializes instead of compiling;
+* ``Tracker`` / ``JsonlTracker`` / ``StatsSampler`` — background-
+  threaded telemetry that records lifecycle events and periodic
+  ``stats()`` snapshots without ever blocking the serving path.
+
+Live reload lives on the serving objects themselves
+(``AsyncCNNGateway.register_plan``/``retire_plan``,
+``Fleet.rollout``/``Fleet.retire_plan``); this package supplies the
+durable state they read from and report into.  See ``docs/ops.md``.
+"""
+
+from repro.ops.cache import (CACHE_FORMAT_VERSION, PersistentExecutableCache,
+                             cache_fingerprint)
+from repro.ops.store import (PlanCorrupt, PlanNotFound, PlanRetired,
+                             PlanStore, PlanStoreError)
+from repro.ops.tracker import (JsonlTracker, NullTracker, StatsSampler,
+                               Tracker, read_events)
+
+__all__ = [
+    "PlanStore", "PlanStoreError", "PlanNotFound", "PlanRetired",
+    "PlanCorrupt",
+    "PersistentExecutableCache", "cache_fingerprint",
+    "CACHE_FORMAT_VERSION",
+    "Tracker", "NullTracker", "JsonlTracker", "StatsSampler",
+    "read_events",
+]

@@ -31,7 +31,7 @@ from repro.core.deploy import (DeploymentError, DeploymentPlan,
 from repro.runtime.compiled import (CompiledCNN, CompiledModel,
                                     DispatchAborted, ExecutableCache,
                                     bucket_ladder, validate_container_input)
-from repro.runtime.plan_io import load_plan, save_plan
+from repro.runtime.plan_io import atomic_write_text, load_plan, save_plan
 from repro.runtime.workloads import (CNNWorkloadSpec, CompiledMoE,
                                      MoELayerSpec, MoEWorkloadSpec,
                                      WorkloadSpec, compile_plan,
@@ -44,7 +44,8 @@ __all__ = [
     "CNNWorkloadSpec", "CompiledCNN", "CompiledMoE", "CompiledModel",
     "DeploymentError", "DeploymentPlan", "DispatchAborted",
     "ExecutableCache", "MoELayerSpec", "MoEWorkloadSpec",
-    "PLAN_SCHEMA_VERSION", "WorkloadSpec", "bucket_ladder", "compile_plan",
+    "PLAN_SCHEMA_VERSION", "WorkloadSpec", "atomic_write_text",
+    "bucket_ladder", "compile_plan",
     "get_workload", "list_workloads", "load_plan",
     "moe_workload_from_config", "plan_deployment", "plan_moe_deployment",
     "register_workload", "save_plan", "validate_container_input",

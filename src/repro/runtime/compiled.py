@@ -52,6 +52,7 @@ nobody is waiting for, and all telemetry counters are lock-protected so
 from __future__ import annotations
 
 import threading
+import time
 import warnings
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
@@ -83,17 +84,33 @@ class ExecutableCache:
     gateway routes every registered plan through one ``ExecutableCache``
     for exactly this reason.
 
-    Thread-safe: lookups/inserts take a lock; compilation itself runs
-    outside it (two racing threads may both compile the same key — the
-    first insert wins and the duplicate is dropped, a benign waste, not
-    a correctness hazard).
+    Thread-safe and **single-flight**: lookups/inserts take a lock,
+    production runs outside it, and a key already being produced by
+    another thread is *waited on* (condition variable), never produced
+    twice — two plans registering concurrently over coinciding layers
+    pay for one compile, with the loser parked instead of burning a
+    core on a duplicate build (``coalesced`` counts those waits).
+
+    Subclass seam: ``_produce(key, build)`` turns a missing key into an
+    executable (base class: call ``build()``); a disk tier like
+    ``repro.ops.PersistentExecutableCache`` overrides it to try a
+    deserialization load first and compile only on a true miss.
+    ``on_event`` (``callable(event: str, fields: dict)``) receives the
+    *rare* cache transitions — compiles and disk loads/stores/fallbacks
+    — never per-dispatch memory hits, so wiring a tracker here costs
+    nothing on the serving hot path.
     """
 
-    def __init__(self):
+    def __init__(self, *, on_event: Optional[Callable[[str, dict],
+                                                      None]] = None):
         self._execs: Dict[tuple, object] = {}
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._building: set = set()    # keys with a production in flight
         self.compiles = 0              # builds that entered the cache
         self.hits = 0                  # lookups served without building
+        self.coalesced = 0             # waits piggybacked on another build
+        self.on_event = on_event
 
     def __len__(self) -> int:
         with self._lock:
@@ -103,24 +120,65 @@ class ExecutableCache:
         with self._lock:
             return key in self._execs
 
+    def _emit(self, event: str, **fields) -> None:
+        """Report a rare cache transition to ``on_event`` (tracker
+        seam).  A misbehaving observer must never break serving."""
+        cb = self.on_event
+        if cb is None:
+            return
+        try:
+            cb(event, fields)
+        except Exception:              # noqa: BLE001 — observer only
+            pass
+
+    def _produce(self, key: tuple, build: Callable[[], object]
+                 ) -> Tuple[object, bool]:
+        """Produce the executable for a missing ``key`` — called
+        outside the lock, single-flighted per key.  Returns
+        ``(executable, compiled)`` where ``compiled`` says ``build()``
+        actually ran (a disk tier returns False for a load)."""
+        t0 = time.perf_counter()
+        exe = build()
+        self._emit("cache_compile", key=repr(key)[:160],
+                   seconds=time.perf_counter() - t0)
+        return exe, True
+
     def get_or_build(self, key: tuple, build: Callable[[], object]):
-        with self._lock:
-            exe = self._execs.get(key)
-        if exe is not None:
-            with self._lock:
-                self.hits += 1
-            return exe
-        exe = build()                  # compile outside the lock
-        with self._lock:
-            winner = self._execs.setdefault(key, exe)
-            if winner is exe:
+        with self._cond:
+            while True:
+                exe = self._execs.get(key)
+                if exe is not None:
+                    self.hits += 1
+                    return exe
+                if key not in self._building:
+                    self._building.add(key)
+                    break
+                # another thread is producing this very key: wait for
+                # it instead of compiling a duplicate (single-flight)
+                self.coalesced += 1
+                self._cond.wait()
+        try:
+            exe, compiled = self._produce(key, build)   # outside the lock
+        except BaseException:
+            with self._cond:
+                # failed production frees the key: a parked waiter (or
+                # the next caller) becomes the new producer and retries
+                self._building.discard(key)
+                self._cond.notify_all()
+            raise
+        with self._cond:
+            self._building.discard(key)
+            self._execs[key] = exe
+            if compiled:
                 self.compiles += 1
-        return winner
+            self._cond.notify_all()
+        return exe
 
     def stats(self) -> dict:
         with self._lock:
             return {"executables": len(self._execs),
-                    "compiles": self.compiles, "hits": self.hits}
+                    "compiles": self.compiles, "hits": self.hits,
+                    "coalesced": self.coalesced}
 
 
 def bucket_ladder(max_batch: int) -> Tuple[int, ...]:

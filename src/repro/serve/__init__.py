@@ -8,7 +8,7 @@ from repro.serve.cnn_engine import (CNNEngine, CNNServeConfig,
 from repro.serve.async_engine import (AdmissionQueue, AsyncCNNGateway,
                                       AsyncRequest, AsyncServeConfig,
                                       DeadlineExpired, GatewayBacklog,
-                                      RequestCancelled)
+                                      PlanUnavailable, RequestCancelled)
 
 __all__ = ["ServeConfig", "Engine", "Request", "SlotPool", "GatewayStats",
            "CNNEngine", "CNNServeConfig", "ImageRequest", "validate_image",
@@ -16,4 +16,4 @@ __all__ = ["ServeConfig", "Engine", "Request", "SlotPool", "GatewayStats",
            "get_policy", "list_policies",
            "AdmissionQueue", "AsyncCNNGateway", "AsyncRequest",
            "AsyncServeConfig", "DeadlineExpired", "GatewayBacklog",
-           "RequestCancelled"]
+           "PlanUnavailable", "RequestCancelled"]

@@ -93,6 +93,12 @@ class RequestCancelled(RuntimeError):
     result was produced."""
 
 
+class PlanUnavailable(RuntimeError):
+    """The target plan is retiring or was retired: admission refuses
+    new requests for it.  In-flight and already-queued requests still
+    complete — retirement drains, it never drops."""
+
+
 @dataclass(eq=False)               # identity hash: requests live in sets
 class AsyncRequest:
     """One in-flight gateway request.  ``deadline`` is absolute on the
@@ -316,6 +322,12 @@ class AdmissionQueue:
             heapq.heappush(self._heap, entry)
         return plan_id, batch
 
+    def pending_for(self, plan_id: str) -> int:
+        """Count still-pending queued entries targeting one plan — the
+        drain check live plan retirement polls until zero."""
+        return sum(1 for _, _, req in self._heap
+                   if req.status == "pending" and req.plan_id == plan_id)
+
     def evict_pending(self) -> List[AsyncRequest]:
         """Remove every still-pending entry from the heap *without*
         finishing it or touching the live count.  The caller owns the
@@ -381,7 +393,9 @@ class AsyncCNNGateway(SlotPool):
     """
 
     def __init__(self, cfg: Optional[AsyncServeConfig] = None, *,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 exec_cache: Optional[ExecutableCache] = None,
+                 tracker=None):
         cfg = cfg if cfg is not None else AsyncServeConfig()
         if cfg.max_inflight < 1:
             raise ValueError(f"max_inflight={cfg.max_inflight} must be ≥ 1")
@@ -404,8 +418,21 @@ class AsyncCNNGateway(SlotPool):
         self.clock = clock
         self.queue = AdmissionQueue(cfg.max_pending, cfg.policy)
         self.plans: Dict[str, _PlanEntry] = {}
-        self.exec_cache = ExecutableCache()   # shared across all plans
+        # shared across all plans; pass a repro.ops
+        # PersistentExecutableCache here and a restart deserializes
+        # instead of recompiling
+        self.exec_cache = (exec_cache if exec_cache is not None
+                           else ExecutableCache())
+        # ops telemetry sink (repro.ops.Tracker); every call is
+        # fire-and-forget and must never block the loop thread
+        self.tracker = tracker
+        if tracker is not None \
+                and getattr(self.exec_cache, "on_event", False) is None:
+            self.exec_cache.on_event = (
+                lambda ev, fields: tracker.log_event(ev, **fields))
         self._default_plan: Optional[str] = None
+        self._retiring: set = set()    # admission-closed, still draining
+        self.retired_plans: Dict[str, int] = {}   # plan_id → served
         # one device, one execution stream: a single worker thread
         # serialises device compute no matter how many dispatches are
         # staged.  ``max_inflight > 1`` still pays off — the *next*
@@ -462,29 +489,110 @@ class AsyncCNNGateway(SlotPool):
         self.plans[plan_id] = _PlanEntry(plan_id, compiled)
         if self._default_plan is None:
             self._default_plan = plan_id
+        self._track("plan_registered", plan_id=plan_id,
+                    kind=compiled.kind)
         return plan_id
 
     @classmethod
     def from_plan(cls, plan, cfg: Optional[AsyncServeConfig] = None, *,
                   plan_id: Optional[str] = None, params=None, key=None,
-                  mesh=None, clock: Callable[[], float] = time.monotonic
-                  ) -> "AsyncCNNGateway":
-        gw = cls(cfg, clock=clock)
+                  mesh=None, clock: Callable[[], float] = time.monotonic,
+                  exec_cache: Optional[ExecutableCache] = None,
+                  tracker=None) -> "AsyncCNNGateway":
+        gw = cls(cfg, clock=clock, exec_cache=exec_cache, tracker=tracker)
         gw.register_plan(plan, plan_id=plan_id, params=params, key=key,
                          mesh=mesh)
         return gw
+
+    def _track(self, event: str, **fields) -> None:
+        if self.tracker is not None:
+            self.tracker.log_event(event, **fields)
+
+    @property
+    def routable_plans(self) -> frozenset:
+        """Plan ids admission currently accepts — registered minus
+        retiring.  Fleet routing reads this, so a retiring plan stops
+        receiving traffic the moment ``begin_retire`` runs."""
+        return frozenset(pid for pid in self.plans
+                         if pid not in self._retiring)
 
     def _entry(self, plan_id: Optional[str]) -> _PlanEntry:
         pid = plan_id if plan_id is not None else self._default_plan
         if pid is None:
             raise RuntimeError("no plan registered "
                                "(call register_plan first)")
+        if pid in self._retiring:
+            raise PlanUnavailable(
+                f"plan {pid!r} is retiring; routable: "
+                f"{sorted(self.routable_plans)}")
         try:
             return self.plans[pid]
         except KeyError:
+            if pid in self.retired_plans:
+                raise PlanUnavailable(
+                    f"plan {pid!r} was retired; routable: "
+                    f"{sorted(self.routable_plans)}") from None
             raise ValueError(
                 f"unknown plan id {pid!r}; registered: "
                 f"{sorted(self.plans)}") from None
+
+    # -- live retirement ---------------------------------------------------
+    def begin_retire(self, plan_id: str) -> None:
+        """Phase 1 of live retirement: stop routing new requests to
+        ``plan_id`` — admission raises ``PlanUnavailable``, the default
+        plan reassigns to the next routable one — while queued and
+        in-flight requests continue untouched.  Idempotent; the fleet
+        marks every worker this way before draining any of them so no
+        re-route lands on a copy that is about to disappear."""
+        if plan_id not in self.plans:
+            raise ValueError(
+                f"unknown plan id {plan_id!r}; registered: "
+                f"{sorted(self.plans)}")
+        if plan_id in self._retiring:
+            return
+        self._retiring.add(plan_id)
+        if self._default_plan == plan_id:
+            self._default_plan = next(
+                (pid for pid in self.plans if pid not in self._retiring),
+                None)
+        self._track("plan_retiring", plan_id=plan_id)
+
+    def _plan_outstanding(self, plan_id: str) -> int:
+        """Queued + in-flight requests still owed to ``plan_id``."""
+        queued = self.queue.pending_for(plan_id)
+        inflight = sum(1 for r in self.active
+                       if r is not None and r.plan_id == plan_id
+                       and r.status == "pending")
+        return queued + inflight
+
+    async def retire_plan(self, plan_id: str, *,
+                          poll_s: float = 0.01) -> int:
+        """Retire a plan from a live gateway **without dropping
+        in-flight requests**: close admission (``begin_retire``), wait
+        for every queued and in-flight request of the plan to reach a
+        terminal state through the normal dispatch path, then evict the
+        compiled entry.  Returns the plan's lifetime served count.
+        Concurrent retires of the same plan join the same drain;
+        retiring an already-retired plan returns its count."""
+        self._ensure_started()
+        if plan_id not in self.plans:
+            if plan_id in self.retired_plans:
+                return self.retired_plans[plan_id]
+            raise ValueError(
+                f"unknown plan id {plan_id!r}; registered: "
+                f"{sorted(self.plans)}")
+        self.begin_retire(plan_id)
+        while plan_id in self.plans and self._plan_outstanding(plan_id):
+            self._wake.set()          # keep the drain task moving
+            self._space.set()         # wake submit waiters so those
+            await asyncio.sleep(poll_s)   # targeting this plan can fail
+        entry = self.plans.pop(plan_id, None)
+        self._retiring.discard(plan_id)
+        if entry is not None:
+            self.retired_plans[plan_id] = entry.served
+            self._track("plan_retired", plan_id=plan_id,
+                        served=entry.served)
+        return self.retired_plans.get(plan_id, 0)
 
     # -- lifecycle --------------------------------------------------------
     def _ensure_started(self) -> None:
@@ -672,6 +780,17 @@ class AsyncCNNGateway(SlotPool):
                     req._finish("failed",
                                 error=RuntimeError("gateway is closing"))
                 return fut
+            if req.plan_id in self._retiring \
+                    or req.plan_id not in self.plans:
+                # the target plan retired while this submit awaited
+                # backpressure: admitting now would strand the request
+                # (retirement has already drained past it) — fail it
+                if req.status == "pending":
+                    self.failed += 1
+                    req._finish("failed", error=PlanUnavailable(
+                        f"plan {req.plan_id!r} retired while awaiting "
+                        f"admission"))
+                return fut
             self._adapt_bound()
             if self.queue.admit(req, self.clock()):
                 self._bookkeep_admitted(req)
@@ -759,6 +878,15 @@ class AsyncCNNGateway(SlotPool):
                 width = min(free, self.cfg.max_batch)
                 plan_id, batch = self.queue.pop_batch(width, self.clock())
                 self._signal_space()
+                if batch and plan_id not in self.plans:
+                    # the plan was evicted with requests still queued
+                    # (shouldn't happen — retire drains first — but a
+                    # KeyError here would kill the drain task for good)
+                    for r in batch:
+                        self.failed += 1
+                        r._finish("failed", error=PlanUnavailable(
+                            f"plan {plan_id!r} is no longer registered"))
+                    continue
                 if batch:
                     slots = [self.occupy(r) for r in batch]
                     self._inflight += 1
@@ -793,6 +921,8 @@ class AsyncCNNGateway(SlotPool):
                             compiled(images, should_abort=abort)))
                 except DispatchAborted:
                     self.aborted_dispatches += 1
+                    self._track("dispatch_aborted",
+                                plan_id=entry.plan_id, n=len(alive))
                     out = None
                 except Exception as e:        # noqa: BLE001 — a failed
                     # dispatch must fail its requests, never strand
@@ -802,12 +932,16 @@ class AsyncCNNGateway(SlotPool):
                         self.failed += 1
                     out = None
                 if out is not None:
+                    done = 0
                     for k, r in enumerate(alive):
                         if r.status == "pending":
                             r._finish("done", output=out[k])
                             self.served += 1
                             entry.served += 1
+                            done += 1
                     self._note_step(len(alive), launched_at=launched_at)
+                    self._track("dispatch_complete",
+                                plan_id=entry.plan_id, n=done)
         finally:
             self._inflight -= 1
             for s in slots:
@@ -871,6 +1005,8 @@ class AsyncCNNGateway(SlotPool):
         snap = self.snapshot()
         return {
             "plans": {pid: e.served for pid, e in self.plans.items()},
+            "retiring": sorted(self._retiring),
+            "retired_plans": dict(self.retired_plans),
             "served": snap.served,
             "rejected": snap.rejected,
             "expired": snap.expired,

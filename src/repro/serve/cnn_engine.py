@@ -75,13 +75,15 @@ class CNNEngine(SlotPool):
     def __init__(self, cfg: Optional[CNNConfig] = None, params=None,
                  blocks: Optional[Sequence[BlockLike]] = None,
                  serve_cfg: Optional[CNNServeConfig] = None, mesh=None, *,
-                 compiled: Optional[CompiledModel] = None):
+                 compiled: Optional[CompiledModel] = None,
+                 exec_cache=None):
         serve_cfg = serve_cfg if serve_cfg is not None else CNNServeConfig()
         super().__init__(serve_cfg.max_batch)
         if compiled is None:
             compiled = CompiledCNN(cfg, params, blocks,
                                    max_batch=serve_cfg.max_batch,
-                                   mesh=mesh, warmup=serve_cfg.aot_warmup)
+                                   mesh=mesh, warmup=serve_cfg.aot_warmup,
+                                   exec_cache=exec_cache)
         elif compiled.max_batch < serve_cfg.max_batch:
             raise ValueError(
                 f"compiled max_batch={compiled.max_batch} smaller than the "
@@ -103,14 +105,16 @@ class CNNEngine(SlotPool):
     @classmethod
     def from_plan(cls, plan, cfg: Optional[CNNConfig] = None, *,
                   params=None, key=None,
-                  serve_cfg: Optional[CNNServeConfig] = None, mesh=None
-                  ) -> "CNNEngine":
+                  serve_cfg: Optional[CNNServeConfig] = None, mesh=None,
+                  exec_cache=None) -> "CNNEngine":
         """Engine for a planned deployment of **any workload kind**:
         the plan's ``WorkloadSpec`` builds the compiled backend
         (``runtime.compile_plan``), so an MoE plan serves through the
         same engine as a CNN plan.  ``cfg`` (CNN plans only) overrides
         the network embedded in the plan; ``params`` default to a fresh
-        draw at the planned precisions."""
+        draw at the planned precisions.  ``exec_cache`` (e.g. a
+        ``repro.ops.PersistentExecutableCache``) makes a warm restart
+        deserialize its executables instead of recompiling."""
         serve_cfg = serve_cfg if serve_cfg is not None else CNNServeConfig()
         if serve_cfg.max_batch < 1:       # fail before compiling anything
             raise ValueError(f"max_batch={serve_cfg.max_batch} must be ≥ 1")
@@ -118,13 +122,13 @@ class CNNEngine(SlotPool):
             compiled = CompiledCNN.from_plan(
                 plan, cfg, params=params, key=key,
                 max_batch=serve_cfg.max_batch, mesh=mesh,
-                warmup=serve_cfg.aot_warmup)
+                warmup=serve_cfg.aot_warmup, exec_cache=exec_cache)
         else:
             from repro.runtime.workloads import compile_plan
             compiled = compile_plan(
                 plan, params=params, key=key,
                 max_batch=serve_cfg.max_batch, mesh=mesh,
-                warmup=serve_cfg.aot_warmup)
+                warmup=serve_cfg.aot_warmup, exec_cache=exec_cache)
         return cls(serve_cfg=serve_cfg, mesh=mesh, compiled=compiled)
 
     # -- admission -------------------------------------------------------

@@ -1,0 +1,292 @@
+"""Live plan reload: gateway-level ``register_plan``/``retire_plan``
+under traffic (zero requests lost, admission closed instantly, tracker
+lifecycle order), fleet-wide rollout/retire, and the simulator's
+mid-trace retirement accounting."""
+
+import asyncio
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import deploy
+from repro.core.cnn import CNNConfig, ConvLayerSpec, fitted_block_models
+from repro.fleet import (Fleet, FleetError, FleetWorker, NoWorkerAvailable,
+                         SimWorkerSpec, make_trace, simulate)
+from repro.ops import Tracker
+from repro.runtime import CompiledCNN
+from repro.serve import (AsyncCNNGateway, AsyncServeConfig,
+                         PlanUnavailable)
+
+
+def _cfg():
+    return CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
+        ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
+    ), img_h=16, img_w=64)
+
+
+@pytest.fixture(scope="module")
+def compiled_plan():
+    plan = deploy.plan_deployment(_cfg(), fitted_block_models(),
+                                  target=0.8, on_infeasible="fallback")
+    return plan, CompiledCNN.from_plan(plan, max_batch=4)
+
+
+class ListTracker(Tracker):
+    """In-memory tracker: records every entry for order assertions."""
+
+    def __init__(self):
+        self.entries = []
+
+    def record(self, entry):
+        self.entries.append(entry)
+
+    def events(self):
+        return [e["event"] for e in self.entries]
+
+
+class GatedCompiled:
+    """CompiledModel test double whose dispatch blocks on an event —
+    requests stay verifiably *in flight* until the test releases them."""
+
+    kind = "cnn"
+
+    def __init__(self, gate=None, max_batch=4):
+        self.gate = gate
+        self.max_batch = max_batch
+        self.in_shape = (4, 4, 1)
+        self.in_dtype = np.int8
+        self.calls = 0
+
+    def validate_input(self, x, request_id=0):
+        return np.asarray(x, self.in_dtype)
+
+    def __call__(self, xb, should_abort=None):
+        self.calls += 1
+        if self.gate is not None:
+            assert self.gate.wait(timeout=10)
+        return np.asarray(xb) * 2
+
+
+def _img():
+    return np.ones((4, 4, 1), np.int8)
+
+
+# ---------------------------------------------------------------------------
+# gateway: retire under live traffic
+# ---------------------------------------------------------------------------
+
+def test_retire_completes_all_inflight_and_closes_admission():
+    """The acceptance invariant: a plan retired while requests are
+    queued AND mid-dispatch completes every one of them — zero lost —
+    while new submits fail with ``PlanUnavailable`` immediately."""
+    gate = threading.Event()
+    tracker = ListTracker()
+
+    async def main():
+        gw = AsyncCNNGateway(AsyncServeConfig(max_batch=2, max_pending=16),
+                             tracker=tracker)
+        gw.register_plan(None, plan_id="a",
+                         compiled=GatedCompiled(gate, max_batch=2))
+        gw.register_plan(None, plan_id="b", compiled=GatedCompiled())
+        async with gw:
+            futs = [await gw.submit(_img(), plan_id="a")
+                    for _ in range(6)]
+            await asyncio.sleep(0.05)     # first batch is now in flight
+
+            retire = asyncio.create_task(gw.retire_plan("a"))
+            await asyncio.sleep(0.05)
+            # admission closed the moment retirement began ...
+            assert gw.routable_plans == frozenset({"b"})
+            with pytest.raises(PlanUnavailable, match="retiring"):
+                await gw.submit(_img(), plan_id="a")
+            # ... and the default plan re-pointed off the retiring one
+            assert gw._default_plan == "b"
+            assert not retire.done()      # in-flight work still owed
+
+            gate.set()                    # release the gated dispatches
+            outs = await asyncio.gather(*futs)
+            served = await retire
+            assert served == 6 and len(outs) == 6
+            for out in outs:
+                np.testing.assert_array_equal(out, np.asarray(_img()) * 2)
+
+            # plan is gone; the typed error distinguishes retired
+            with pytest.raises(PlanUnavailable, match="retired"):
+                await gw.submit(_img(), plan_id="a")
+            # repeat retire joins the recorded result
+            assert await gw.retire_plan("a") == 6
+            with pytest.raises(ValueError, match="unknown plan"):
+                await gw.retire_plan("ghost")
+            # plan "b" is untouched throughout
+            assert (await (await gw.submit(_img(), plan_id="b"))) \
+                is not None
+            stats = gw.stats()
+            assert stats["retired_plans"] == {"a": 6}
+            assert stats["failed"] == 0 and stats["cancelled"] == 0
+
+    asyncio.run(main())
+    events = tracker.events()
+    # lifecycle order: registration precedes retirement intent, and
+    # eviction comes only after plan a's final in-flight dispatch
+    i_last_dispatch = max(
+        i for i, e in enumerate(tracker.entries)
+        if e["event"] == "dispatch_complete" and e["plan_id"] == "a")
+    assert events.index("plan_registered") \
+        < events.index("plan_retiring") \
+        < i_last_dispatch < events.index("plan_retired")
+    (retired,) = [e for e in tracker.entries
+                  if e["event"] == "plan_retired"]
+    assert retired["plan_id"] == "a" and retired["served"] == 6
+
+
+def test_backpressure_waiter_fails_on_retire():
+    """A submit awaiting admission (queue at bound) whose plan retires
+    mid-wait must fail with ``PlanUnavailable`` — not hang, not sneak
+    in behind the drain."""
+    gate = threading.Event()
+
+    async def main():
+        gw = AsyncCNNGateway(AsyncServeConfig(max_batch=1, max_pending=2))
+        gw.register_plan(None, plan_id="a",
+                         compiled=GatedCompiled(gate, max_batch=1))
+        async with gw:
+            admitted = [await gw.submit(_img(), plan_id="a")
+                        for _ in range(3)]   # bound 2 + 1 in flight
+            waiter = asyncio.create_task(gw.submit(_img(), plan_id="a"))
+            await asyncio.sleep(0.05)
+            assert not waiter.done()         # parked on backpressure
+
+            retire = asyncio.create_task(gw.retire_plan("a"))
+            gate.set()
+            served = await retire
+            fut = await waiter
+            with pytest.raises(PlanUnavailable, match="retired while"):
+                await fut
+            assert served == 3               # the admitted ones all ran
+            for f in admitted:
+                assert (await f) is not None
+
+    asyncio.run(main())
+
+
+def test_register_plan_on_live_gateway_serves_immediately():
+    async def main():
+        gw = AsyncCNNGateway(AsyncServeConfig(max_batch=2))
+        gw.register_plan(None, plan_id="v1", compiled=GatedCompiled())
+        async with gw:
+            assert (await gw.infer(_img())) is not None
+            gw.register_plan(None, plan_id="v2", compiled=GatedCompiled())
+            assert gw.routable_plans == frozenset({"v1", "v2"})
+            out = await gw.infer(_img(), plan_id="v2")
+            np.testing.assert_array_equal(out, np.asarray(_img()) * 2)
+            # retire the original: v2 keeps serving, becomes default
+            await gw.retire_plan("v1")
+            assert gw._default_plan == "v2"
+            assert (await gw.infer(_img())) is not None
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# fleet: rollout + retire across workers
+# ---------------------------------------------------------------------------
+
+def test_fleet_rollout_then_retire_loses_nothing(compiled_plan):
+    plan, compiled = compiled_plan
+    tracker = ListTracker()
+
+    def worker(wid):
+        gw = AsyncCNNGateway(AsyncServeConfig(max_batch=4,
+                                              max_pending=16))
+        gw.register_plan(plan, plan_id="cnn-v1", compiled=compiled)
+        return FleetWorker(wid, gw, "v5e")
+
+    imgs = compiled.sample_inputs(8)
+
+    async def main():
+        workers = [worker("w0"), worker("w1")]
+        fleet = Fleet(workers, router="plan_aware", tracker=tracker)
+        async with fleet:
+            # rollout: both workers gain cnn-v2 while serving
+            registered = await fleet.rollout(plan, "cnn-v2")
+            assert registered == {"w0": "cnn-v2", "w1": "cnn-v2"}
+            for w in workers:
+                assert w.plan_ids == frozenset({"cnn-v1", "cnn-v2"})
+            # idempotent: a second rollout registers nowhere
+            assert await fleet.rollout(plan, "cnn-v2") == {}
+            with pytest.raises(FleetError, match="unknown worker"):
+                await fleet.rollout(plan, "cnn-v3", worker_ids=["nope"])
+
+            # in-flight traffic on v1 while it retires fleet-wide
+            futs = [await fleet.submit(img, plan_id="cnn-v1")
+                    for img in imgs]
+            served = await fleet.retire_plan("cnn-v1")
+            outs = await asyncio.gather(*futs)
+            assert len(outs) == len(imgs) and served >= len(imgs)
+            for w in workers:
+                assert w.plan_ids == frozenset({"cnn-v2"})
+
+            # v1 traffic now has no worker; v2 serves
+            with pytest.raises(NoWorkerAvailable):
+                fleet.submit_nowait(imgs[0], plan_id="cnn-v1")
+            out = await (await fleet.submit(imgs[0], plan_id="cnn-v2"))
+            assert out is not None
+            # repeat fleet retire is joinable, not an error
+            assert await fleet.retire_plan("cnn-v1") == served
+
+    asyncio.run(main())
+    events = tracker.events()
+    assert events.count("plan_rollout") == 2
+    assert "plan_retired_fleet" in events
+    done = [e for e in tracker.entries
+            if e["event"] == "plan_retired_fleet"][0]
+    assert done["workers"] == ["w0", "w1"]
+
+
+# ---------------------------------------------------------------------------
+# simulator: mid-trace retirement accounting
+# ---------------------------------------------------------------------------
+
+_SIM_SPECS = (SimWorkerSpec("w0", "v5e", plan_ids=("cnn", "moe")),
+              SimWorkerSpec("w1", "v5e", plan_ids=("cnn", "moe")))
+
+
+def _mixed_trace(n=2000, seed=11):
+    return make_trace(n, rate=1200.0, seed=seed,
+                      plan_mix={"cnn": 0.6, "moe": 0.4})
+
+
+def test_sim_retire_refuses_instead_of_losing():
+    trace = _mixed_trace()
+    retire_at = float(trace.arrivals[len(trace) // 2])
+    res = simulate(_SIM_SPECS, trace, "plan_aware",
+                   retire_at=retire_at, retire_plan_id="moe")
+    assert res.lost == 0
+    assert res.refused_retired > 0
+    assert res.retired_plan == "moe"
+    assert res.completed + res.refused_retired == len(trace)
+    # refusals only come from post-retire moe arrivals
+    post = np.sum((trace.arrivals >= retire_at)
+                  & (np.asarray(trace.plan_idx)
+                     == trace.plan_ids.index("moe")))
+    assert res.refused_retired <= int(post)
+    payload = res.to_payload()
+    assert payload["refused_retired"] == res.refused_retired
+    assert payload["retired_plan"] == "moe"
+
+
+def test_sim_without_retire_is_unchanged():
+    trace = _mixed_trace()
+    res = simulate(_SIM_SPECS, trace, "plan_aware")
+    assert res.refused_retired == 0 and res.retired_plan is None
+    assert res.completed == len(trace) and res.lost == 0
+
+
+def test_sim_retire_args_go_together():
+    trace = _mixed_trace(n=50)
+    with pytest.raises(ValueError, match="go together"):
+        simulate(_SIM_SPECS, trace, "plan_aware", retire_at=1.0)
+    with pytest.raises(ValueError, match="go together"):
+        simulate(_SIM_SPECS, trace, "plan_aware", retire_plan_id="moe")

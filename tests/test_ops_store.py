@@ -1,0 +1,254 @@
+"""``repro.ops.PlanStore``: crash-safe plan persistence — round-trips,
+retire/revive lifecycle, corrupt-file quarantine, id validation, and a
+property test over concurrent save/load/retire interleavings."""
+
+import json
+import threading
+
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import deploy
+from repro.core.cnn import CNNConfig, ConvLayerSpec, fitted_block_models
+from repro.ops import (PlanCorrupt, PlanNotFound, PlanRetired, PlanStore,
+                       PlanStoreError)
+
+
+def _plan():
+    cfg = CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
+        ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
+    ), img_h=16, img_w=64)
+    return deploy.plan_deployment(cfg, fitted_block_models(), target=0.8,
+                                  on_infeasible="fallback")
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return _plan()
+
+
+# ---------------------------------------------------------------------------
+# round-trip + listing
+# ---------------------------------------------------------------------------
+
+def test_save_load_round_trip(tmp_path, plan):
+    store = PlanStore(tmp_path)
+    path = store.save(plan, "cnn-v1")
+    assert path.exists() and path == store.path_for("cnn-v1")
+    loaded = store.load("cnn-v1")
+    assert [(l.block, l.data_bits, l.coeff_bits) for l in loaded.layers] \
+        == [(l.block, l.data_bits, l.coeff_bits) for l in plan.layers]
+    assert loaded.device == plan.device
+
+
+def test_listing_sorted_and_membership(tmp_path, plan):
+    store = PlanStore(tmp_path)
+    for pid in ("b", "a", "c"):
+        store.save(plan, pid)
+    assert store.list_plans() == ["a", "b", "c"]
+    assert len(store) == 3 and "b" in store and "zz" not in store
+    # stray files are not plans
+    (tmp_path / "plans" / "notes.txt").write_text("hi")
+    (tmp_path / "plans" / ".hidden.json").write_text("{}")
+    assert store.list_plans() == ["a", "b", "c"]
+
+
+def test_overwrite_is_allowed(tmp_path, plan):
+    store = PlanStore(tmp_path)
+    store.save(plan, "p")
+    store.save(plan, "p")                       # idempotent re-publish
+    assert store.list_plans() == ["p"]
+
+
+def test_two_instances_share_the_directory(tmp_path, plan):
+    PlanStore(tmp_path).save(plan, "shared")
+    again = PlanStore(tmp_path)                 # "another process"
+    assert again.list_plans() == ["shared"]
+    assert again.load("shared").device == plan.device
+
+
+# ---------------------------------------------------------------------------
+# retire lifecycle
+# ---------------------------------------------------------------------------
+
+def test_retire_moves_and_load_raises_retired(tmp_path, plan):
+    store = PlanStore(tmp_path)
+    store.save(plan, "old")
+    store.retire("old")
+    assert store.list_plans() == [] and store.list_retired() == ["old"]
+    with pytest.raises(PlanRetired, match="retired"):
+        store.load("old")
+    # but the artifact is still readable where it went
+    assert store.load_retired("old").device == plan.device
+
+
+def test_revive_after_retire(tmp_path, plan):
+    store = PlanStore(tmp_path)
+    store.save(plan, "p")
+    store.retire("p")
+    store.save(plan, "p")                       # re-publish revives
+    assert store.list_plans() == ["p"]
+    assert store.load("p").device == plan.device
+
+
+def test_retire_missing_raises_not_found(tmp_path):
+    store = PlanStore(tmp_path)
+    with pytest.raises(PlanNotFound, match="to retire"):
+        store.retire("ghost")
+    with pytest.raises(PlanNotFound):
+        store.load("ghost")
+    with pytest.raises(PlanNotFound):
+        store.load_retired("ghost")
+
+
+def test_not_found_is_also_keyerror(tmp_path):
+    """``PlanNotFound`` subclasses ``KeyError`` so mapping-style callers
+    catch it — but it prints like a RuntimeError (no KeyError quoting)."""
+    store = PlanStore(tmp_path)
+    with pytest.raises(KeyError):
+        store.load("ghost")
+    err = PlanNotFound("no plan 'ghost'")
+    assert str(err) == "no plan 'ghost'"
+
+
+# ---------------------------------------------------------------------------
+# corruption + validation
+# ---------------------------------------------------------------------------
+
+def test_corrupt_file_is_quarantined(tmp_path, plan):
+    store = PlanStore(tmp_path)
+    store.save(plan, "ok")
+    store.path_for("bad").write_text("{ not json")
+    with pytest.raises(PlanCorrupt, match="quarantine"):
+        store.load("bad")
+    # moved aside, not deleted; store keeps working
+    assert not store.path_for("bad").exists()
+    q = list((tmp_path / "quarantine").iterdir())
+    assert len(q) == 1 and q[0].read_text() == "{ not json"
+    assert store.list_plans() == ["ok"]
+    assert store.load("ok").device == plan.device
+
+
+def test_schema_violation_is_corrupt_not_crash(tmp_path):
+    store = PlanStore(tmp_path)
+    store.path_for("vX").write_text(json.dumps({"schema": 999}))
+    with pytest.raises(PlanCorrupt):
+        store.load("vX")
+
+
+@pytest.mark.parametrize("bad_id", [
+    "", ".hidden", "../escape", "a/b", "a\\b", "x" * 101, "sp ace",
+    ".", "..",
+])
+def test_invalid_plan_ids_rejected(tmp_path, plan, bad_id):
+    store = PlanStore(tmp_path)
+    with pytest.raises(ValueError, match="plan_id"):
+        store.save(plan, bad_id)
+    with pytest.raises(ValueError):
+        store.load(bad_id)
+    assert bad_id not in store                  # no traversal probe
+
+
+def test_save_requires_a_plan(tmp_path):
+    with pytest.raises(PlanStoreError, match="DeploymentPlan"):
+        PlanStore(tmp_path).save({"not": "a plan"}, "p")
+
+
+# ---------------------------------------------------------------------------
+# concurrency: interleaved save/load/retire never corrupts the store
+# ---------------------------------------------------------------------------
+
+def test_threaded_save_load_retire_stress(tmp_path, plan):
+    """Deterministic stress twin of the property test below: 4 threads
+    hammer save/load/retire on two ids; every load must yield either a
+    complete plan or a typed miss — never a torn read."""
+    store = PlanStore(tmp_path)
+    store.save(plan, "a")
+    errors = []
+
+    def worker(k):
+        for i in range(25):
+            pid = ("a", "b")[(k + i) % 2]
+            try:
+                op = (k + i) % 3
+                if op == 0:
+                    store.save(plan, pid)
+                elif op == 1:
+                    got = store.load(pid)
+                    assert len(got.layers) == len(plan.layers)
+                else:
+                    store.retire(pid)
+            except (PlanNotFound, PlanRetired):
+                pass                            # legal interleavings
+            except Exception as e:              # noqa: BLE001
+                errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(k,))
+               for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    # invariants: never a torn read — every surviving artifact parses
+    # (an id may be live AND retired: revive keeps the audit copy)
+    for pid in store.list_plans():
+        assert len(store.load(pid).layers) == len(plan.layers)
+    for pid in store.list_retired():
+        assert len(store.load_retired(pid).layers) == len(plan.layers)
+
+
+if HAVE_HYPOTHESIS:
+    _ops_strategy = st.lists(
+        st.tuples(st.sampled_from(["save", "load", "retire"]),
+                  st.sampled_from(["a", "b"]),
+                  st.integers(min_value=0, max_value=3)),
+        min_size=1, max_size=24)
+else:                                           # pragma: no cover
+    _ops_strategy = None
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=_ops_strategy)
+def test_property_interleaved_ops_keep_store_consistent(tmp_path_factory,
+                                                        plan, ops):
+    """Any schedule of save/load/retire across threads leaves the store
+    consistent: every surviving artifact (live or retired) parses, and
+    loads only ever fail with the typed misses — never a torn read."""
+    root = tmp_path_factory.mktemp("store")
+    store = PlanStore(root)
+    errors = []
+
+    def apply(op, pid):
+        try:
+            if op == "save":
+                store.save(plan, pid)
+            elif op == "load":
+                store.load(pid)
+            else:
+                store.retire(pid)
+        except (PlanNotFound, PlanRetired):
+            pass
+        except Exception as e:                  # noqa: BLE001
+            errors.append(e)
+
+    # run the drawn schedule split across threads (round-robin), so
+    # hypothesis shrinks over genuinely concurrent interleavings
+    lanes = [[], [], []]
+    for i, (op, pid, _salt) in enumerate(ops):
+        lanes[i % 3].append((op, pid))
+    threads = [threading.Thread(
+        target=lambda lane=lane: [apply(op, pid) for op, pid in lane])
+        for lane in lanes if lane]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert errors == []
+    for pid in store.list_plans():
+        assert len(store.load(pid).layers) == 2
+    for pid in store.list_retired():
+        assert len(store.load_retired(pid).layers) == 2

@@ -1,0 +1,149 @@
+"""``repro.ops`` telemetry: the JSONL tracker's never-block contract
+(bounded queue, drop counting, flush-on-close), torn-line tolerance,
+and the periodic stats sampler."""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.ops import (JsonlTracker, NullTracker, StatsSampler, Tracker,
+                       read_events)
+
+
+def test_events_written_with_t_and_event(tmp_path):
+    path = tmp_path / "m.jsonl"
+    tr = JsonlTracker(path)
+    tr.log_event("alpha", plan_id="p1")
+    tr.log_metrics("gateway", {"served": 3})
+    tr.close()
+    events = read_events(path)
+    assert [e["event"] for e in events] == ["alpha", "stats",
+                                            "tracker_closed"]
+    assert all("t" in e for e in events)
+    assert events[0]["plan_id"] == "p1"
+    assert events[1]["source"] == "gateway"
+    assert events[1]["metrics"] == {"served": 3}
+
+
+def test_close_is_idempotent_and_seals_totals(tmp_path):
+    tr = JsonlTracker(tmp_path / "m.jsonl")
+    for i in range(10):
+        tr.log_event("e", i=i)
+    tr.close()
+    tr.close()                         # second close is a no-op
+    events = read_events(tr.path)
+    closed = events[-1]
+    assert closed["event"] == "tracker_closed"
+    assert closed["recorded"] == 10 and closed["dropped"] == 0
+    assert len(events) == 11
+
+
+def test_bounded_queue_drops_instead_of_blocking(tmp_path):
+    """With the writer wedged, overflow must drop-and-count — record()
+    never waits on the disk."""
+    tr = JsonlTracker(tmp_path / "m.jsonl", max_queue=8,
+                      flush_interval_s=30)
+    gate = threading.Event()
+    # wedge the writer thread inside a write
+    tr._write = lambda entry, _w=tr._write: (gate.wait(5), _w(entry))[1]
+    t0 = time.monotonic()
+    for i in range(100):
+        tr.log_event("burst", i=i)
+    assert time.monotonic() - t0 < 2.0      # never blocked on the queue
+    assert tr.dropped > 0
+    assert tr.recorded + tr.dropped == 100
+    gate.set()
+    tr.close()
+    events = read_events(tr.path)
+    assert events[-1]["dropped"] == tr.dropped
+
+
+def test_record_after_close_counts_dropped(tmp_path):
+    tr = JsonlTracker(tmp_path / "m.jsonl")
+    tr.log_event("before")
+    tr.close()
+    tr.log_event("after")              # silently dropped, counted
+    assert tr.dropped == 1
+    assert [e["event"] for e in read_events(tr.path)] \
+        == ["before", "tracker_closed"]
+
+
+def test_read_events_skips_torn_trailing_line(tmp_path):
+    path = tmp_path / "m.jsonl"
+    tr = JsonlTracker(path)
+    tr.log_event("whole")
+    tr.close()
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write('{"event": "torn-by-cra')   # crash mid-write
+    events = read_events(path)
+    assert [e["event"] for e in events] == ["whole", "tracker_closed"]
+
+
+def test_unserializable_fields_fall_back_to_repr(tmp_path):
+    tr = JsonlTracker(tmp_path / "m.jsonl")
+    tr.log_event("odd", payload=object())
+    tr.close()
+    (entry,) = [e for e in read_events(tr.path) if e["event"] == "odd"]
+    assert "object at 0x" in entry["payload"]
+
+
+def test_tracker_context_manager(tmp_path):
+    with JsonlTracker(tmp_path / "m.jsonl") as tr:
+        tr.log_event("inside")
+    assert [e["event"] for e in read_events(tr.path)] \
+        == ["inside", "tracker_closed"]
+
+
+def test_null_tracker_accepts_everything():
+    tr = NullTracker()
+    tr.log_event("x", a=1)
+    tr.log_metrics("src", {"b": 2})
+    tr.close()
+    assert isinstance(tr, Tracker)
+
+
+# ---------------------------------------------------------------------------
+# StatsSampler
+# ---------------------------------------------------------------------------
+
+def test_sampler_samples_periodically_and_on_close(tmp_path):
+    calls = []
+
+    def source():
+        calls.append(1)
+        return {"n": len(calls)}
+
+    tr = JsonlTracker(tmp_path / "m.jsonl")
+    sampler = StatsSampler(tr, {"fake": source}, interval_s=0.02)
+    deadline = time.monotonic() + 5
+    while sampler.samples < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    sampler.close()                    # + one final sample
+    sampler.close()                    # idempotent
+    tr.close()
+    stats = [e for e in read_events(tr.path) if e["event"] == "stats"]
+    assert len(stats) == len(calls) >= 4
+    assert stats[-1]["metrics"]["n"] == len(calls)
+    assert all(e["source"] == "fake" for e in stats)
+
+
+def test_sampler_survives_raising_source(tmp_path):
+    tr = JsonlTracker(tmp_path / "m.jsonl")
+
+    def bad():
+        raise RuntimeError("stats exploded")
+
+    sampler = StatsSampler(tr, {"bad": bad, "good": lambda: {"ok": 1}},
+                           interval_s=0.01)
+    deadline = time.monotonic() + 5
+    while sampler.samples < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    sampler.close()
+    tr.close()
+    events = read_events(tr.path)
+    errors = [e for e in events if e["event"] == "sample_error"]
+    good = [e for e in events if e["event"] == "stats"]
+    assert errors and "stats exploded" in errors[0]["error"]
+    assert good and all(e["source"] == "good" for e in good)

@@ -324,6 +324,53 @@ def test_validate_container_input_noun():
                                  np.int8, noun="patch")
 
 
+def test_validate_image_shim_keeps_the_image_noun_and_request_id():
+    """The legacy name must keep producing legacy-shaped errors: the
+    noun is ``image`` (not the generic ``input``) and the request id
+    callers passed still lands in the message."""
+    with pytest.deprecated_call():
+        with pytest.raises(ValueError, match=r"request 7: image shape"):
+            validate_image(np.zeros((2, 2), np.int8), (8, 8, 1),
+                           np.int8, request_id=7)
+
+
+def test_validate_image_shim_reexported_from_repro_serve():
+    """PR-8 moved the engine module but the public ``repro.serve``
+    surface still re-exports the shim (callers import it from there)."""
+    import repro.serve as serve
+    assert serve.validate_image is validate_image
+    assert "validate_image" in serve.__all__
+
+
+def test_sample_images_shim_seed_determinism_and_default():
+    """``sample_images`` must keep its full signature contract through
+    the shim: same seed ⇒ same draw as ``sample_inputs``, default seed
+    included, and every call warns."""
+    compiled = compile_plan(_cnn_plan(), max_batch=2, warmup=False)
+    with pytest.deprecated_call():
+        default = compiled.sample_images(1)
+    np.testing.assert_array_equal(default[0],
+                                  compiled.sample_inputs(1, seed=0)[0])
+    with pytest.deprecated_call():
+        a = compiled.sample_images(3, seed=11)
+    with pytest.deprecated_call():
+        b = compiled.sample_images(3, seed=11)
+    np.testing.assert_array_equal(np.stack(a), np.stack(b))
+    # the shimmed draws admit through the modern validation seam
+    for img in a:
+        compiled.validate_input(img)
+
+
+def test_shim_warnings_name_the_replacement():
+    """The deprecation text must point at the successor API — that's
+    what makes the migration self-serve."""
+    compiled = compile_plan(_cnn_plan(), max_batch=1, warmup=False)
+    with pytest.warns(DeprecationWarning, match="sample_inputs"):
+        compiled.sample_images(1)
+    with pytest.warns(DeprecationWarning, match="validate_input"):
+        validate_image(np.zeros((8, 8, 1), np.int8), (8, 8, 1), np.int8)
+
+
 # ---------------------------------------------------------------------------
 # config-zoo bridge
 # ---------------------------------------------------------------------------
