@@ -1,0 +1,282 @@
+"""Kill-mid-trace recovery benchmark: the fleet loses nothing through
+a worker crash, and a warm respawn from the shared store recompiles
+nothing.
+
+Two halves, one artifact (``BENCH_recovery.json``):
+
+**Simulated** (virtual clock, bit-reproducible): the heterogeneous
+edge/v5e/v5p fleet under the plan-aware router replays the seeded
+Poisson trace three ways — undisturbed baseline, kill the v5p worker
+mid-trace with a warm respawn later, and kill with no respawn.  The
+kill voids the worker's in-flight batch (the process died mid-dispatch,
+unlike a graceful drain) and re-routes it plus the queue on original
+deadlines.  Gates: ``completed == requests`` and ``lost == 0`` through
+the kill, the kill actually re-routed work, and the respawned worker
+demonstrably returns to rotation (it serves strictly more than in the
+no-respawn run).
+
+**Live** (asyncio, real executables): two gateway workers share one
+``repro.ops.StoreRoot`` (one ``PlanStore`` + one persistent executable
+cache + per-worker leases).  A seeded ``FaultPlan`` crashes worker
+``a`` at its first dispatch; the fleet kills it and re-routes every
+queued and mid-dispatch request; ``Fleet.respawn`` rebuilds the worker
+from the shared store via ``repro.chaos.respawn_gateway`` and the
+health probe re-admits it.  Gates: ``completed + refused == requests``
+with every completion bit-exact against the reference forward,
+``rerouted > 0``, and the respawned gateway reports **zero compiles**
+(every executable deserialized from the predecessor's cache —
+``disk_hits > 0``).
+
+Same ``--seed`` → bit-identical simulated payloads; the live half's
+invariant gates are timing-independent.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_SEED, add_seed_argument, emit
+
+REQUESTS = 200_000
+MAX_BATCH = 8
+OCCUPANCY = 2.2                  # offered load ÷ single-v5e capacity
+KILL_FRACTION = 0.4              # kill this far into the trace...
+RESPAWN_FRACTION = 0.6           # ...respawn here
+KILL_WORKER = "w1-v5e"           # the loaded worker: deepest queue to
+                                 # re-route (the v5p clears its queue
+                                 # too fast to be mid-batch reliably)
+LIVE_REQUESTS = 48
+JSON_PATH = "BENCH_recovery.json"
+
+
+def _fleet_specs():
+    from repro.fleet import SimWorkerSpec
+    return (SimWorkerSpec("w0-edge", "edge", ("cnn",), MAX_BATCH),
+            SimWorkerSpec("w1-v5e", "v5e", ("cnn",), MAX_BATCH),
+            SimWorkerSpec("w2-v5p", "v5p", ("cnn",), MAX_BATCH))
+
+
+def run_sim(requests: int, seed: int) -> dict:
+    from repro.fleet import make_trace, simulate
+    from repro.fleet.sim import V5E_IMAGE_S, V5E_OVERHEAD_S
+
+    rate = OCCUPANCY * MAX_BATCH / (V5E_OVERHEAD_S
+                                    + MAX_BATCH * V5E_IMAGE_S)
+    trace = make_trace(requests, rate, seed=seed)
+    horizon = float(trace.arrivals[-1])
+    specs = _fleet_specs()
+
+    baseline = simulate(specs, trace, "plan_aware")
+    killed = simulate(specs, trace, "plan_aware",
+                      kill_at=KILL_FRACTION * horizon,
+                      kill_worker=KILL_WORKER,
+                      respawn_at=RESPAWN_FRACTION * horizon)
+    no_respawn = simulate(specs, trace, "plan_aware",
+                          kill_at=KILL_FRACTION * horizon,
+                          kill_worker=KILL_WORKER)
+
+    for name, r in (("baseline", baseline), ("kill_respawn", killed),
+                    ("kill_only", no_respawn)):
+        emit(f"recovery/sim_{name}", 0.0,
+             f"completed={r.completed};lost={r.lost};"
+             f"rerouted={r.rerouted};kill_rerouted={r.kill_rerouted}")
+
+    return {
+        "requests": requests,
+        "horizon_s": horizon,
+        "kill_at_s": KILL_FRACTION * horizon,
+        "respawn_at_s": RESPAWN_FRACTION * horizon,
+        "kill_worker": KILL_WORKER,
+        "runs": {"baseline": baseline.to_payload(),
+                 "kill_respawn": killed.to_payload(),
+                 "kill_only": no_respawn.to_payload()},
+    }
+
+
+def run_live(seed: int) -> dict:
+    from repro.chaos import (FaultInjector, FaultPlan, FaultSpec,
+                             respawn_gateway)
+    from repro.core import deploy
+    from repro.core.cnn import (CNNConfig, ConvLayerSpec, cnn_forward_ref,
+                                fitted_block_models)
+    from repro.fleet import Fleet, FleetError, FleetWorker, HealthPolicy
+    from repro.ops import StoreRoot
+    from repro.runtime import CompiledCNN
+    from repro.serve import AsyncServeConfig
+
+    import jax.numpy as jnp
+
+    cfg = CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
+        ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
+    ), img_h=16, img_w=64)
+    plan = deploy.plan_deployment(cfg, fitted_block_models(),
+                                  target=0.8, on_infeasible="fallback")
+
+    with tempfile.TemporaryDirectory(prefix="recovery-bench-") as tmp:
+        root = StoreRoot(Path(tmp) / "state")
+        root.plans.save(plan, "cnn")
+
+        # the predecessor process pays the compile storm into the
+        # shared cache — what makes the respawn warm
+        t0 = time.perf_counter()
+        pre = root.exec_cache()
+        compiled = CompiledCNN.from_plan(plan, max_batch=4,
+                                         exec_cache=pre)
+        cold_compile_s = time.perf_counter() - t0
+
+        fault_plan = FaultPlan((
+            FaultSpec("crash_dispatch", "a", after_n=1),), seed=seed)
+        inj = FaultInjector(fault_plan)
+
+        def _serve_cfg():
+            return AsyncServeConfig(max_batch=4,
+                                    max_pending=2 * LIVE_REQUESTS)
+
+        respawn_s = [0.0]
+
+        def spawn_a():
+            t0 = time.perf_counter()
+            inj.revive("a")
+            gw = respawn_gateway(root, "a", ["cnn"], _serve_cfg())
+            respawn_s[0] = time.perf_counter() - t0
+            return gw
+
+        gw_a = respawn_gateway(root, "a", ["cnn"], _serve_cfg(),
+                               faults=inj.for_target("a"))
+        gw_b = respawn_gateway(root, "b", ["cnn"], _serve_cfg())
+        imgs = compiled.sample_inputs(LIVE_REQUESTS, seed=seed)
+
+        async def main():
+            workers = [
+                FleetWorker("a", gw_a, "v5e", spawn=spawn_a,
+                            health=HealthPolicy(eject_after=1,
+                                                probe_interval=0.05)),
+                FleetWorker("b", gw_b, "v5e"),
+            ]
+            fleet = Fleet(workers, router="round_robin")
+            async with fleet:
+                futs, refused = [], 0
+                for i, img in enumerate(imgs):
+                    try:
+                        futs.append(fleet.submit_nowait(img))
+                    except FleetError:
+                        refused += 1
+                    if i % 4 == 3:      # let dispatches (and the
+                        await asyncio.sleep(0.005)  # crash) happen
+                outs = await asyncio.gather(*futs)
+                killed = fleet.workers["a"].dead
+                await fleet.respawn("a")
+                # the canaries that re-admit the respawned worker
+                t0 = time.perf_counter()
+                canary = [await fleet.infer(img) for img in imgs[:2]]
+                first_served_s = time.perf_counter() - t0
+                readmitted = fleet.workers["a"].health.healthy
+                cache_stats = (fleet.workers["a"].gateway
+                               .exec_cache.stats())
+                return (outs, refused, canary, killed, readmitted,
+                        first_served_s, cache_stats, fleet.stats())
+
+        (outs, refused, canary, killed, readmitted, first_served_s,
+         cache_stats, fleet_stats) = asyncio.run(main())
+
+        pcfg = deploy.plan_config(plan)
+        refs = [np.asarray(cnn_forward_ref(compiled.params,
+                                           jnp.asarray(i), pcfg))
+                for i in imgs]
+        bit_exact = (
+            all(np.array_equal(o, r) for o, r in zip(outs, refs))
+            and np.array_equal(canary[0], refs[0]))
+
+        leases = root.list_leases()
+
+    live = {
+        "requests": LIVE_REQUESTS,
+        "completed": len(outs),
+        "refused": refused,
+        "rerouted": fleet_stats["rerouted"],
+        "kills": fleet_stats["kills"],
+        "respawns": fleet_stats["respawns"],
+        "worker_killed": killed,
+        "worker_readmitted": readmitted,
+        "bit_exact": bit_exact,
+        "injected": [[k, t] for k, t, _ in inj.injected],
+        "leases": leases,
+        "respawn_compiles": cache_stats["compiles"],
+        "respawn_disk_hits": cache_stats["disk_hits"],
+        "cold_compile_s": cold_compile_s,
+        "respawn_build_s": respawn_s[0],
+        "respawn_first_served_s": first_served_s,
+    }
+    emit("recovery/live_kill_respawn", first_served_s * 1e6,
+         f"completed={live['completed']};refused={refused};"
+         f"rerouted={live['rerouted']};"
+         f"respawn_compiles={live['respawn_compiles']}")
+    return live
+
+
+def run(json_path: str | Path = JSON_PATH, *, requests: int = REQUESTS,
+        seed: int = DEFAULT_SEED) -> dict:
+    sim = run_sim(requests, seed)
+    live = run_live(seed)
+
+    killed = sim["runs"]["kill_respawn"]
+    dead = sim["runs"]["kill_only"]
+    victim = KILL_WORKER
+    acceptance = {
+        # nothing admitted is lost through the kill, sim or live
+        "sim_zero_lost": killed["lost"] == 0
+        and killed["completed"] == requests,
+        "sim_kill_rerouted": killed["kill_rerouted"],
+        # the respawn demonstrably returned the worker to rotation
+        "sim_respawn_restores_service":
+            killed["per_worker"][victim]["served"]
+            > dead["per_worker"][victim]["served"],
+        "live_zero_lost":
+            live["completed"] + live["refused"] == live["requests"],
+        "live_rerouted": live["rerouted"],
+        "live_bit_exact": live["bit_exact"],
+        "live_worker_readmitted": live["worker_readmitted"],
+        # the warm-respawn headline: restart-from-store compiles nothing
+        "live_respawn_zero_recompiles": live["respawn_compiles"] == 0,
+        "live_respawn_disk_hits": live["respawn_disk_hits"],
+    }
+    headline = all(
+        v is not False and v != 0 for v in acceptance.values())
+    emit("recovery/acceptance", 0.0,
+         ";".join(f"{k}={v}" for k, v in acceptance.items()))
+
+    payload = {
+        "bench": "recovery",
+        "schema": 1,
+        "seed": seed,
+        "occupancy_vs_single_v5e": OCCUPANCY,
+        "kill_fraction": KILL_FRACTION,
+        "respawn_fraction": RESPAWN_FRACTION,
+        "sim": sim,
+        "live": live,
+        "acceptance": acceptance,
+        "accepted": headline,
+    }
+    Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=JSON_PATH,
+                    help=f"output path (default {JSON_PATH})")
+    ap.add_argument("--requests", type=int, default=REQUESTS,
+                    help=f"simulated trace length (default {REQUESTS:,}; "
+                         f"CI uses 50000)")
+    add_seed_argument(ap)
+    a = ap.parse_args()
+    run(a.json, requests=a.requests, seed=a.seed)

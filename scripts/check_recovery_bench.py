@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Acceptance gate for ``BENCH_recovery.json`` (kill-mid-trace fleet
+recovery, live and simulated).
+
+The recovery contract the chaos layer pins:
+
+  * **zero lost** — through the kill, the simulated fleet completes
+    every request (``completed == requests``, ``lost == 0``) and the
+    live fleet accounts for every admitted request
+    (``completed + refused == requests``), bit-exactly;
+  * the kill actually **re-routed** work (sim ``kill_rerouted > 0``,
+    live ``rerouted > 0``) — a kill that evicted nothing proves
+    nothing;
+  * the **warm respawn compiles nothing** — the replacement gateway
+    rebuilt from the shared ``StoreRoot`` reports ``compiles == 0``
+    with ``disk_hits > 0`` (every executable deserialized from what
+    the dead predecessor had stored), and the health probe re-admitted
+    the worker;
+  * the simulated respawn demonstrably **returns the worker to
+    rotation** (it serves strictly more than in the no-respawn run).
+
+Run after regenerating the bench (CI chaos job does both):
+
+    python benchmarks/recovery_bench.py
+    python scripts/check_recovery_bench.py [BENCH_recovery.json]
+
+Exits non-zero with a verdict per gate when the artifact misses a bar.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def check(path: str | Path) -> int:
+    payload = json.loads(Path(path).read_text())
+    sim, live = payload.get("sim"), payload.get("live")
+    if not sim or not live:
+        print(f"FAIL {path}: missing sim/live results")
+        return 1
+    failures = 0
+    killed = sim["runs"]["kill_respawn"]
+    dead = sim["runs"]["kill_only"]
+    victim = sim["kill_worker"]
+
+    ok = killed["lost"] == 0 and killed["completed"] == sim["requests"]
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} sim zero lost: completed "
+          f"{killed['completed']}/{sim['requests']}, lost "
+          f"{killed['lost']} (must complete everything, lose nothing)")
+
+    ok = killed["kill_rerouted"] > 0
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} sim kill re-routed "
+          f"{killed['kill_rerouted']} requests (must be > 0: the kill "
+          f"evicted a real queue/in-flight batch)")
+
+    served = killed["per_worker"][victim]["served"]
+    served_dead = dead["per_worker"][victim]["served"]
+    ok = served > served_dead
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} sim respawn restored service: "
+          f"{victim} served {served} with respawn vs {served_dead} "
+          f"without")
+
+    ok = live["completed"] + live["refused"] == live["requests"] \
+        and live["bit_exact"]
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} live accounting: "
+          f"{live['completed']} completed + {live['refused']} refused "
+          f"== {live['requests']} admitted, bit_exact="
+          f"{live['bit_exact']}")
+
+    ok = live["rerouted"] > 0 and live["kills"] == 1 \
+        and live["respawns"] == 1 and live["worker_readmitted"]
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} live kill→respawn path: "
+          f"rerouted {live['rerouted']}, kills {live['kills']}, "
+          f"respawns {live['respawns']}, readmitted "
+          f"{live['worker_readmitted']}")
+
+    ok = live["respawn_compiles"] == 0 and live["respawn_disk_hits"] > 0
+    failures += not ok
+    print(f"{'ok  ' if ok else 'FAIL'} warm respawn compiles "
+          f"{live['respawn_compiles']} (must be 0), disk_hits "
+          f"{live['respawn_disk_hits']} (must be > 0: restart-from-"
+          f"store deserializes everything)")
+
+    if failures:
+        print(f"FAIL {path}: {failures} gate(s) missed")
+        return 1
+    print(f"ok   {path}: kill→respawn loses nothing; warm respawn "
+          f"served first request in "
+          f"{live['respawn_first_served_s'] * 1e3:.1f} ms with zero "
+          f"recompiles")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1
+                   else "BENCH_recovery.json"))

@@ -9,7 +9,11 @@ fastest admissible worker and best-effort traffic to the cheapest
 profile that still fits), a per-worker health machine ejects workers on
 consecutive failures and probes them back in, and ``Fleet.drain``
 removes a worker gracefully — in-flight batches finish, queued requests
-re-route, nothing admitted is lost.
+re-route, nothing admitted is lost.  ``Fleet.kill``/``Fleet.respawn``
+are the *ungraceful* pair behind ``repro.chaos``: a killed worker's
+queued and mid-dispatch requests re-route on their original deadlines,
+and a respawn from the shared ``repro.ops.StoreRoot`` re-admits the
+worker through the health-probe path with zero recompiles.
 
 The same routers drive ``repro.fleet.sim`` — a virtual-clock simulator
 that replays seeded million-request traces for the SLO benchmark

@@ -42,6 +42,7 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.chaos.inject import WorkerCrashed
 from repro.fleet.router import Router, RouterLike, get_router
 from repro.fleet.worker import FleetWorker
 from repro.serve.async_engine import DeadlineExpired, GatewayBacklog
@@ -128,6 +129,8 @@ class Fleet:
         self.retried = 0
         self.worker_failures = 0
         self.drains = 0
+        self.kills = 0
+        self.respawns = 0
 
     def _track(self, event: str, **fields) -> None:
         if self.tracker is not None:
@@ -381,6 +384,22 @@ class Fleet:
             self.expired += 1
             if not fr.future.done():
                 fr.future.set_exception(exc)
+        elif isinstance(exc, WorkerCrashed):
+            # the worker process died mid-dispatch (chaos-injected or
+            # real): record the failure, declare the worker dead (kill
+            # is idempotent and sweeps up its queued + in-flight
+            # siblings) and re-route this request on its original
+            # deadline budget *without* spending the bounded retry
+            # budget — a crashed worker's requests are victims of the
+            # crash, not evidence against the requests themselves
+            self.worker_failures += 1
+            worker.health.note_failure(self.clock())
+            if not worker.dead:
+                self.kill(worker.worker_id)
+            if not fr.future.done():
+                self.rerouted += 1
+                self._spawn(self._route_and_admit(
+                    fr, excluded=frozenset({worker.worker_id})))
         else:
             self.worker_failures += 1
             was_ejected = worker.health.ejected
@@ -424,6 +443,90 @@ class Fleet:
                 await ev.wait()
             finally:
                 worker._idle_waiters.remove(ev)
+        return worker
+
+    # -- kill / respawn (crash recovery) ----------------------------------
+    def kill(self, worker_id: str) -> FleetWorker:
+        """Declare ``worker_id`` dead *now* — the un-graceful cousin of
+        ``drain``.  The worker becomes unroutable (``dead`` flag +
+        ``force_eject``) and every request it still owes is re-routed
+        on its **original** deadline budget: queued-but-undispatched
+        requests come back through ``extract_queued`` and mid-dispatch
+        ones have their worker futures cancelled — both resolve through
+        the existing cancelled-not-by-client branch of the outcome
+        machine, which re-routes.  Nothing is lost: a request that
+        cannot be re-placed resolves with ``NoWorkerAvailable``
+        (refused), never silence.  Idempotent."""
+        self._ensure_started()
+        try:
+            worker = self.workers[worker_id]
+        except KeyError:
+            raise FleetError(
+                f"unknown worker {worker_id!r}; fleet has: "
+                f"{sorted(self.workers)}") from None
+        if worker.dead:
+            return worker
+        worker.dead = True
+        self.kills += 1
+        worker.health.force_eject(self.clock())
+        self._track("worker_killed", worker_id=worker_id)
+        try:
+            # queued requests: futures cancel → outcome machine re-routes
+            worker.gateway.extract_queued()
+        except Exception:   # noqa: BLE001 — a dead gateway may not answer
+            pass
+        for fr in list(worker.outstanding):
+            # mid-dispatch requests: cancelling the worker future both
+            # aborts the gateway-side request and re-routes here
+            if fr.worker_fut is not None and not fr.worker_fut.done():
+                fr.worker_fut.cancel()
+        return worker
+
+    async def respawn(self, worker_id: str, *,
+                      gateway=None) -> FleetWorker:
+        """Bring a killed worker back behind the same fleet identity.
+
+        The replacement ``gateway`` is either passed in or built by the
+        worker's ``spawn`` factory **off the event loop** — with a
+        factory like ``repro.chaos.respawn_gateway`` over a shared
+        ``StoreRoot`` the rebuild deserializes its executables from the
+        shared cache (zero recompiles) and reloads its plans from the
+        shared ``PlanStore``.  The worker does *not* return to routing
+        directly: it stays ejected with its probe immediately due, so
+        the first request routed to it is the canary and re-admission
+        goes through the existing health-probe path."""
+        self._ensure_started()
+        try:
+            worker = self.workers[worker_id]
+        except KeyError:
+            raise FleetError(
+                f"unknown worker {worker_id!r}; fleet has: "
+                f"{sorted(self.workers)}") from None
+        if not worker.dead:
+            raise FleetError(
+                f"worker {worker_id!r} is not dead; respawn follows "
+                f"kill — use drain() for graceful maintenance")
+        if gateway is None:
+            if worker.spawn is None:
+                raise FleetError(
+                    f"worker {worker_id!r} has no spawn factory; pass "
+                    f"gateway= or construct FleetWorker(..., spawn=...)")
+            gateway = await self._loop.run_in_executor(None, worker.spawn)
+        old = worker.gateway
+        worker.gateway = gateway
+        worker.dead = False
+        worker.draining = False
+        # stay ejected, probe due *immediately*: the next routed
+        # request is the canary that re-admits the worker
+        health = worker.health
+        health.probing = False
+        health.ejected_at = self.clock() - health.policy.probe_interval
+        self.respawns += 1
+        self._track("worker_respawned", worker_id=worker_id)
+        try:
+            await old.close()
+        except Exception:   # noqa: BLE001 — the dead gateway owes nothing
+            pass
         return worker
 
     # -- live plan reload -------------------------------------------------
@@ -521,6 +624,7 @@ class Fleet:
                 "ejections": w.health.ejections,
                 "probes": w.health.probes,
                 "draining": w.draining,
+                "dead": w.dead,
                 "outstanding": len(w.outstanding),
                 "snapshot": snap,
             }
@@ -533,5 +637,7 @@ class Fleet:
             "retried": self.retried,
             "worker_failures": self.worker_failures,
             "drains": self.drains,
+            "kills": self.kills,
+            "respawns": self.respawns,
             "workers": per_worker,
         }

@@ -94,6 +94,20 @@ class WorkerHealth:
         canary can go out."""
         self.probing = False
 
+    def force_eject(self, now: float) -> None:
+        """Administrative ejection (worker killed / declared dead):
+        immediately unroutable, probe clock armed at ``now``.  Unlike
+        ``note_failure`` this does not wait for a failure streak —
+        death is not a statistical question.  Idempotent on an
+        already-ejected worker (re-arms the exile clock)."""
+        if not self.ejected:
+            self.ejections += 1
+        self.ejected = True
+        self.ejected_at = now
+        self.probing = False
+        self.consecutive_failures = max(self.consecutive_failures,
+                                        self.policy.eject_after)
+
     def note_failure(self, now: float) -> None:
         """A request failed (dispatch error or unreachable stats).
         Failed probes re-arm the exile clock; ``eject_after`` straight

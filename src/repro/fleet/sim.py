@@ -156,7 +156,7 @@ class _SimWorker:
 
     __slots__ = ("spec", "profile", "per_image_s", "overhead_s", "view",
                  "queue", "busy", "served", "batches", "busy_s",
-                 "served_by_tier", "served_by_plan")
+                 "served_by_tier", "served_by_plan", "dead", "gen")
 
     def __init__(self, spec: SimWorkerSpec):
         self.spec = spec
@@ -178,6 +178,10 @@ class _SimWorker:
         self.busy_s = 0.0
         self.served_by_tier: Dict[str, int] = {}
         self.served_by_plan: Dict[str, int] = {}
+        self.dead = False
+        # incarnation counter: a kill bumps it, so completion events
+        # scheduled by a dead incarnation are discarded at pop time
+        self.gen = 0
 
     def service_s(self, n: int) -> float:
         return self.overhead_s + n * self.per_image_s
@@ -217,6 +221,13 @@ class SimResult:
     # not lost (every already-admitted request still completes)
     refused_retired: int = 0
     retired_plan: Optional[str] = None
+    # kill→respawn (``kill_at``/``kill_worker``/``respawn_at``): queued
+    # + mid-dispatch requests of the killed worker re-routed at kill
+    # time on their original deadlines — the recovery contract is that
+    # none of them land in ``lost``
+    kill_rerouted: int = 0
+    killed_worker: Optional[str] = None
+    respawn_at_s: Optional[float] = None
 
     @property
     def all_slos_met(self) -> bool:
@@ -238,6 +249,9 @@ class SimResult:
             "all_slos_met": self.all_slos_met,
             "refused_retired": self.refused_retired,
             "retired_plan": self.retired_plan,
+            "kill_rerouted": self.kill_rerouted,
+            "killed_worker": self.killed_worker,
+            "respawn_at_s": self.respawn_at_s,
         }
 
 
@@ -246,7 +260,10 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
              drain_at: Optional[float] = None,
              drain_worker: Optional[str] = None,
              retire_at: Optional[float] = None,
-             retire_plan_id: Optional[str] = None) -> SimResult:
+             retire_plan_id: Optional[str] = None,
+             kill_at: Optional[float] = None,
+             kill_worker: Optional[str] = None,
+             respawn_at: Optional[float] = None) -> SimResult:
     """Replay ``trace`` through a simulated fleet under ``router``.
 
     ``drain_at``/``drain_worker`` schedule one mid-trace graceful
@@ -262,6 +279,16 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
     in ``refused_retired``, not ``lost``) while every request admitted
     before the cut still dispatches and completes normally (phase 2's
     drain) — zero admitted requests lost.
+
+    ``kill_at``/``kill_worker`` schedule one mid-trace *crash* — the
+    virtual twin of ``Fleet.kill``: unlike a drain, the in-flight batch
+    does **not** finish (the process died mid-dispatch); it and every
+    queued request re-enter routing at kill time on their original
+    deadlines, counted in ``kill_rerouted``.  ``respawn_at`` (requires
+    a kill, ≥ ``kill_at``) brings the same worker back warm — the
+    virtual twin of ``Fleet.respawn`` from the shared store: same
+    service model, empty queue, routable again.  The recovery
+    invariant the benchmark gates: ``lost == 0`` through kill→respawn.
     """
     rtr: Router = get_router(router)
     workers = [_SimWorker(s) for s in sorted(worker_specs,
@@ -272,7 +299,17 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         raise ValueError("drain_at and drain_worker go together")
     if (retire_at is None) != (retire_plan_id is None):
         raise ValueError("retire_at and retire_plan_id go together")
+    if (kill_at is None) != (kill_worker is None):
+        raise ValueError("kill_at and kill_worker go together")
+    if respawn_at is not None:
+        if kill_at is None:
+            raise ValueError("respawn_at requires kill_at/kill_worker")
+        if respawn_at < kill_at:
+            raise ValueError(f"respawn_at={respawn_at} must be ≥ "
+                             f"kill_at={kill_at}")
     by_id = {w.spec.worker_id: w for w in workers}
+    if kill_worker is not None and kill_worker not in by_id:
+        raise ValueError(f"unknown kill_worker {kill_worker!r}")
     views = [w.view for w in workers]
 
     n = len(trace)
@@ -291,9 +328,12 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
     lost = 0
     rerouted = 0
     refused_retired = 0
+    kill_rerouted = 0
 
-    # completion events only — arrivals stream from the sorted array
-    events: List[Tuple[float, int, int]] = []   # (time, seq, worker_idx)
+    # completion events only — arrivals stream from the sorted array;
+    # ``gen`` stamps the worker incarnation that scheduled the batch,
+    # so a kill invalidates its pending completion without heap surgery
+    events: List[Tuple[float, int, int, int]] = []  # (time, seq, widx, gen)
     eseq = 0
     widx = {w.spec.worker_id: k for k, w in enumerate(workers)}
 
@@ -329,7 +369,8 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         w.busy = batch
         svc = w.service_s(len(batch))
         w.busy_s += svc
-        heapq.heappush(events, (now + svc, eseq, widx[w.spec.worker_id]))
+        heapq.heappush(events,
+                       (now + svc, eseq, widx[w.spec.worker_id], w.gen))
         eseq += 1
 
     def route(req: int, now: float, seq: int) -> bool:
@@ -348,6 +389,10 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
     drained = False
     retire_time = math.inf if retire_at is None else float(retire_at)
     retired = False
+    kill_time = math.inf if kill_at is None else float(kill_at)
+    killed = False
+    respawn_time = math.inf if respawn_at is None else float(respawn_at)
+    respawned = False
 
     def note_unroutable(req: int) -> None:
         """An arrival no worker takes: a request for the retired plan
@@ -391,16 +436,65 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
             if not route(req, drain_time, 10 * n + req):
                 lost += 1
 
+    def maybe_kill(now: float) -> None:
+        # the virtual twin of ``Fleet.kill``: the process dies, so —
+        # unlike a drain — the in-flight batch does NOT finish; it and
+        # the queue re-enter routing at kill time on their original
+        # deadlines.  A re-route no survivor takes is *lost* (the
+        # invariant the recovery bench gates to zero).
+        nonlocal killed, rerouted, kill_rerouted, lost
+        if killed or now < kill_time:
+            return
+        killed = True
+        w = by_id[kill_worker]
+        w.dead = True
+        w.gen += 1                  # voids the pending completion event
+        w.view.healthy = False
+        # mid-dispatch first: it was dispatched because it was the most
+        # urgent work, so it re-routes ahead of the queue
+        evicted = ([] if not w.busy else list(w.busy)) \
+            + [req for _, _, req in sorted(w.queue)]
+        w.busy = False
+        w.queue.clear()
+        w.view.queue_depth = 0
+        w.view.inflight = 0
+        w.sync_wait()
+        for req in evicted:
+            rerouted += 1
+            kill_rerouted += 1
+            rerouted_mask[req] = True
+            if not route(req, kill_time, 20 * n + req):
+                lost += 1
+
+    def maybe_respawn(now: float) -> None:
+        # the virtual twin of ``Fleet.respawn`` from the shared store:
+        # the worker returns warm (same service model — the executable
+        # deserializes, nothing recompiles), empty queue, routable
+        nonlocal respawned
+        if respawned or now < respawn_time or not killed:
+            return
+        respawned = True
+        w = by_id[kill_worker]
+        w.dead = False
+        w.view.healthy = True
+        w.sync_wait()
+
     i = 0                           # next arrival index
     now = 0.0
     while i < n or events:
         next_arrival = arrivals[i] if i < n else math.inf
         if events and events[0][0] <= next_arrival:
-            t, _, k = heapq.heappop(events)
+            t, _, k, g = heapq.heappop(events)
             now = t
             maybe_retire(now)
             maybe_drain(now)
+            maybe_kill(now)
+            maybe_respawn(now)
             w = workers[k]
+            if g != w.gen:
+                # completion scheduled by a killed incarnation — the
+                # batch already re-routed at kill time; drop the event
+                continue
             batch = w.busy
             w.busy = False
             w.view.inflight = 0
@@ -418,12 +512,16 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
             now = next_arrival
             maybe_retire(now)
             maybe_drain(now)
+            maybe_kill(now)
+            maybe_respawn(now)
             if not route(i, now, i):
                 note_unroutable(i)
             i += 1
-    # a drain/retire scheduled after the last event still happens
+    # a drain/retire/kill scheduled after the last event still happens
     maybe_retire(retire_time if retire_time is not math.inf else now)
     maybe_drain(drain_time if drain_time is not math.inf else now)
+    maybe_kill(kill_time if kill_time is not math.inf else now)
+    maybe_respawn(respawn_time if respawn_time is not math.inf else now)
 
     completed = int(np.count_nonzero(~np.isnan(lat)))
     finite_dl = ~np.isinf(deadlines)
@@ -461,6 +559,9 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
             "served_by_plan": dict(sorted(w.served_by_plan.items())),
             "plan_ids": list(w.spec.plan_ids),
             "drained": w.view.draining,
+            "killed": bool(killed and w.spec.worker_id == kill_worker),
+            "respawned": bool(respawned
+                              and w.spec.worker_id == kill_worker),
         }
     return SimResult(
         router=rtr.name, n=n, offered_rate=float(
@@ -469,4 +570,7 @@ def simulate(worker_specs: Sequence[SimWorkerSpec], trace: Trace,
         rerouted=rerouted, late=int(np.count_nonzero(late_mask)),
         late_rerouted=int(np.count_nonzero(late_mask & rerouted_mask)),
         per_tier=per_tier, per_worker=per_worker,
-        refused_retired=refused_retired, retired_plan=retire_plan_id)
+        refused_retired=refused_retired, retired_plan=retire_plan_id,
+        kill_rerouted=kill_rerouted,
+        killed_worker=(kill_worker if killed else None),
+        respawn_at_s=(float(respawn_at) if respawned else None))

@@ -50,9 +50,20 @@ class FleetWorker:
     def __init__(self, worker_id: str, gateway,
                  profile: Union[str, DeviceProfile] = "v5e", *,
                  rate: Optional[float] = None,
-                 health: Optional[HealthPolicy] = None):
+                 health: Optional[HealthPolicy] = None,
+                 spawn: Optional[Callable[[], object]] = None):
         self.worker_id = worker_id
         self.gateway = gateway
+        # zero-arg factory building a *replacement* gateway for this
+        # worker identity (e.g. repro.chaos.respawn_gateway over a
+        # shared StoreRoot); Fleet.respawn calls it off the event loop
+        self.spawn = spawn
+        # set by Fleet.kill: the process behind the gateway is gone —
+        # view() short-circuits to an unroutable view without taking
+        # heartbeat strikes (death was already recorded by the kill;
+        # re-striking would keep re-arming the exile clock and delay
+        # the post-respawn probe)
+        self.dead = False
         self.profile = (device_profile(profile)
                         if isinstance(profile, str) else profile)
         self.rate = (float(rate) if rate is not None
@@ -101,6 +112,12 @@ class FleetWorker:
         raising into the routing path."""
         now = clock() if now is None else now
         rate, est_wait_s = self.rate, None
+        if self.dead:
+            return WorkerView(
+                self.worker_id, cost=self.profile.cost,
+                plan_ids=self.plan_ids, rate=rate, max_batch=1,
+                queue_depth=0, inflight=0, healthy=False,
+                draining=self.draining)
         try:
             snap = self.gateway.snapshot()
             queue_depth, inflight = snap.queue_depth, snap.inflight

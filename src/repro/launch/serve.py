@@ -64,6 +64,26 @@ def _percentiles(lat_s):
 
 
 # -- durable serving state (repro.ops) flags --------------------------------
+def _apply_store_root(args):
+    """``--store-root`` → one shared ``repro.ops.StoreRoot`` standing in
+    for both ``--plan-store`` and ``--cache-dir``: every worker process
+    pointed at the same DIR shares one plan repository and one
+    content-addressed executable cache — which is what lets a respawned
+    worker rebuild its predecessor's serving state with zero recompiles
+    (see ``repro.chaos.respawn_gateway``)."""
+    if not getattr(args, "store_root", None):
+        return
+    if args.plan_store or args.cache_dir:
+        raise SystemExit("--store-root replaces --plan-store and "
+                         "--cache-dir; give one or the other")
+    from repro.ops import StoreRoot
+    root = StoreRoot(args.store_root)
+    args.plan_store = str(root.root)
+    args.cache_dir = str(root.exec_cache_dir)
+    print(f"[ops] shared store root at {args.store_root!r} "
+          f"(plans + exec cache + leases)")
+
+
 def _ops_cache(args):
     """``--cache-dir`` → a ``PersistentExecutableCache`` every compile
     in this process writes through; None without the flag (the callers
@@ -613,6 +633,13 @@ def main():
                          "through the trace (cnn --fleet)")
     ap.add_argument("--seed", type=int, default=1,
                     help="rng seed for generated traffic (cnn --fleet)")
+    ap.add_argument("--store-root", default=None, metavar="DIR",
+                    help="shared store root (repro.ops.StoreRoot): one "
+                         "DIR holding the plan store, the executable "
+                         "cache, and worker leases — point every worker "
+                         "of a fleet here so a respawn rebuilds from its "
+                         "predecessor's state (replaces --plan-store "
+                         "and --cache-dir)")
     ap.add_argument("--plan-store", default=None, metavar="DIR",
                     help="durable plan repository (repro.ops.PlanStore): "
                          "load the workload's plan from DIR if present, "
@@ -627,6 +654,7 @@ def main():
                          "snapshots to FILE as JSON lines "
                          "(repro.ops.JsonlTracker; all workloads)")
     args = ap.parse_args()
+    _apply_store_root(args)
     if args.arch is None:
         args.arch = ("qwen3-moe-30b-a3b" if args.workload == "moe"
                      else "llama3.2-3b")

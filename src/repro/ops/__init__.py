@@ -12,7 +12,11 @@ This package makes that state durable and observable:
   a warm restart deserializes instead of compiling;
 * ``Tracker`` / ``JsonlTracker`` / ``StatsSampler`` — background-
   threaded telemetry that records lifecycle events and periodic
-  ``stats()`` snapshots without ever blocking the serving path.
+  ``stats()`` snapshots without ever blocking the serving path
+  (``read_log`` parses a file back with its seal totals);
+* ``StoreRoot`` — one shared plan-store + executable-cache location
+  for a whole fleet, with per-worker lease files so a respawned
+  worker warm-starts from its dead predecessor's compiles.
 
 Live reload lives on the serving objects themselves
 (``AsyncCNNGateway.register_plan``/``retire_plan``,
@@ -22,16 +26,18 @@ durable state they read from and report into.  See ``docs/ops.md``.
 
 from repro.ops.cache import (CACHE_FORMAT_VERSION, PersistentExecutableCache,
                              cache_fingerprint)
+from repro.ops.root import Lease, LeaseHeld, StoreRoot
 from repro.ops.store import (PlanCorrupt, PlanNotFound, PlanRetired,
                              PlanStore, PlanStoreError)
 from repro.ops.tracker import (JsonlTracker, NullTracker, StatsSampler,
-                               Tracker, read_events)
+                               Tracker, TrackerLog, read_events, read_log)
 
 __all__ = [
     "PlanStore", "PlanStoreError", "PlanNotFound", "PlanRetired",
     "PlanCorrupt",
     "PersistentExecutableCache", "cache_fingerprint",
     "CACHE_FORMAT_VERSION",
+    "StoreRoot", "Lease", "LeaseHeld",
     "Tracker", "NullTracker", "JsonlTracker", "StatsSampler",
-    "read_events",
+    "TrackerLog", "read_log", "read_events",
 ]

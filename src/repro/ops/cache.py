@@ -22,8 +22,12 @@ Keying and safety:
   is treated as a miss and the slot is overwritten with a fresh
   compile.
 * Stale/corrupt/unreadable entries **silently fall back to a live
-  compile**: the broken file is renamed to ``*.corrupt`` (quarantined,
-  for inspection) and serving proceeds exactly as with a cold cache.
+  compile**: a corrupt file is renamed to ``*.corrupt`` and an entry
+  whose embedded fingerprint drifted from the current environment (a
+  jax upgrade or topology change under an unchanged path — possible
+  when a shared dir outlives a deploy) is renamed to ``*.stale``; both
+  are quarantined for inspection, never deserialized, and serving
+  proceeds exactly as with a cold cache.
   Persistence failures on the write side are likewise swallowed — the
   disk tier is an accelerator, never a point of failure.
 * Writes are atomic (tmp + fsync + ``os.replace``), so two processes
@@ -94,6 +98,7 @@ class PersistentExecutableCache(ExecutableCache):
         self.disk_hits = 0     # executables deserialized instead of compiled
         self.disk_stores = 0   # executables serialized to disk
         self.disk_errors = 0   # corrupt/unwritable entries fallen back from
+        self.disk_stale = 0    # fingerprint-drift entries quarantined
 
     # -- key → file --------------------------------------------------
 
@@ -120,7 +125,16 @@ class PersistentExecutableCache(ExecutableCache):
         try:
             entry = pickle.loads(blob)
             if entry["fingerprint"] != self.fingerprint:
-                return None      # stale build/topology: recompile over it
+                # drifted build/topology under an unchanged path:
+                # quarantine, never deserialize, recompile fresh
+                with self._lock:
+                    self.disk_stale += 1
+                try:
+                    os.replace(path, path.with_suffix(".stale"))
+                except OSError:
+                    pass
+                self._emit("cache_disk_stale", path=str(path))
+                return None
             from jax.experimental.serialize_executable import (
                 deserialize_and_load)
             return deserialize_and_load(entry["payload"],
@@ -188,5 +202,6 @@ class PersistentExecutableCache(ExecutableCache):
         out = super().stats()
         out.update({"disk_hits": self.disk_hits,
                     "disk_stores": self.disk_stores,
-                    "disk_errors": self.disk_errors})
+                    "disk_errors": self.disk_errors,
+                    "disk_stale": self.disk_stale})
         return out

@@ -20,11 +20,15 @@ it is complete.
         sampler = StatsSampler(tr, {"gateway": gw.stats}, interval_s=0.5)
         ...
         sampler.close()
-    events = read_events("metrics.jsonl")
+    log = read_log("metrics.jsonl")
+    assert log.sealed and log.dropped == 0
 
 Every record is one JSON object per line with at least ``t`` (epoch
 seconds) and ``event``; samples use ``event: "stats"`` plus ``source``
-and the snapshot under ``metrics``.
+and the snapshot under ``metrics``.  ``read_log`` parses a file back
+into a ``TrackerLog`` that surfaces the seal totals (recorded /
+dropped / write_errors) so recovery tests can bound telemetry loss;
+``read_events`` remains the events-only convenience.
 """
 
 from __future__ import annotations
@@ -35,11 +39,12 @@ import os
 import queue
 import threading
 import time
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Callable, List, Mapping, Optional, Union
+from typing import Callable, List, Mapping, Optional, Tuple, Union
 
 __all__ = ["Tracker", "NullTracker", "JsonlTracker", "StatsSampler",
-           "read_events"]
+           "TrackerLog", "read_log", "read_events"]
 
 
 class Tracker(abc.ABC):
@@ -95,12 +100,18 @@ class JsonlTracker(Tracker):
     """
 
     def __init__(self, path: Union[str, Path], *, max_queue: int = 4096,
-                 flush_interval_s: float = 0.25):
+                 flush_interval_s: float = 0.25,
+                 io_fault: Optional[Callable[[dict], None]] = None):
         self.path = Path(path)
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._q: "queue.Queue" = queue.Queue(maxsize=max_queue)
         self.recorded = 0
         self.dropped = 0
+        self.write_errors = 0
+        #: fault-injection seam: called with each entry before the disk
+        #: write; raising simulates a full/failing disk for that entry
+        #: (the entry is counted in ``write_errors``, never retried)
+        self.io_fault = io_fault
         self._closed = False
         self._lock = threading.Lock()
         self._flush_interval_s = flush_interval_s
@@ -126,10 +137,13 @@ class JsonlTracker(Tracker):
 
     def _write(self, entry: dict) -> None:
         try:
+            if self.io_fault is not None:
+                self.io_fault(entry)
             self._fh.write(json.dumps(entry, default=repr,
                                       sort_keys=True) + "\n")
         except Exception:   # noqa: BLE001 — telemetry must not raise
-            pass
+            with self._lock:
+                self.write_errors += 1
 
     def _run(self) -> None:
         dirty = False
@@ -156,8 +170,10 @@ class JsonlTracker(Tracker):
                 break
         with self._lock:
             recorded, dropped = self.recorded, self.dropped
+            write_errors = self.write_errors
         self._write({"t": time.time(), "event": "tracker_closed",
-                     "recorded": recorded, "dropped": dropped})
+                     "recorded": recorded, "dropped": dropped,
+                     "write_errors": write_errors})
         try:
             self._fh.flush()
             os.fsync(self._fh.fileno())
@@ -174,19 +190,54 @@ class JsonlTracker(Tracker):
         self._thread.join()
 
 
-def read_events(path: Union[str, Path]) -> List[dict]:
-    """Parse a tracker JSONL file (skipping any torn trailing line)."""
-    out = []
+@dataclass(frozen=True)
+class TrackerLog:
+    """A parsed tracker file plus its integrity verdict.
+
+    ``sealed`` is True when the file ends with the ``tracker_closed``
+    record a clean ``close()`` writes; only then are ``recorded`` /
+    ``dropped`` / ``write_errors`` available (they come from the seal,
+    the single source of truth for telemetry-loss bounds — recovery
+    tests assert ``log.dropped == 0`` after a kill→respawn run).  An
+    unsealed file means the tracker process died mid-flight: the events
+    read are a prefix and no loss bound can be claimed.  ``torn_lines``
+    counts unparseable lines skipped during the read (crash-torn
+    trailing writes).
+    """
+
+    events: Tuple[dict, ...]
+    sealed: bool
+    recorded: Optional[int] = None
+    dropped: Optional[int] = None
+    write_errors: Optional[int] = None
+    torn_lines: int = 0
+
+
+def read_log(path: Union[str, Path]) -> TrackerLog:
+    """Parse a tracker JSONL file into events + seal totals."""
+    events: List[dict] = []
+    torn = 0
     with open(path, encoding="utf-8") as fh:
         for line in fh:
             line = line.strip()
             if not line:
                 continue
             try:
-                out.append(json.loads(line))
+                events.append(json.loads(line))
             except json.JSONDecodeError:
-                continue
-    return out
+                torn += 1
+    sealed = bool(events) and events[-1].get("event") == "tracker_closed"
+    seal = events[-1] if sealed else {}
+    return TrackerLog(events=tuple(events), sealed=sealed,
+                      recorded=seal.get("recorded"),
+                      dropped=seal.get("dropped"),
+                      write_errors=seal.get("write_errors"),
+                      torn_lines=torn)
+
+
+def read_events(path: Union[str, Path]) -> List[dict]:
+    """Parse a tracker JSONL file (skipping any torn trailing line)."""
+    return list(read_log(path).events)
 
 
 class StatsSampler:

@@ -395,7 +395,7 @@ class AsyncCNNGateway(SlotPool):
     def __init__(self, cfg: Optional[AsyncServeConfig] = None, *,
                  clock: Callable[[], float] = time.monotonic,
                  exec_cache: Optional[ExecutableCache] = None,
-                 tracker=None):
+                 tracker=None, faults=None):
         cfg = cfg if cfg is not None else AsyncServeConfig()
         if cfg.max_inflight < 1:
             raise ValueError(f"max_inflight={cfg.max_inflight} must be ≥ 1")
@@ -413,7 +413,8 @@ class AsyncCNNGateway(SlotPool):
         # in-flight dispatch: with max_inflight > 1 the next batch can
         # occupy slots (and launch) while the previous is on-device —
         # dispatch width itself stays cfg.max_batch (see _drain).
-        super().__init__(cfg.max_batch * cfg.max_inflight, clock=clock)
+        super().__init__(cfg.max_batch * cfg.max_inflight, clock=clock,
+                         faults=faults)
         self.cfg = cfg
         self.clock = clock
         self.queue = AdmissionQueue(cfg.max_pending, cfg.policy)
@@ -498,8 +499,9 @@ class AsyncCNNGateway(SlotPool):
                   plan_id: Optional[str] = None, params=None, key=None,
                   mesh=None, clock: Callable[[], float] = time.monotonic,
                   exec_cache: Optional[ExecutableCache] = None,
-                  tracker=None) -> "AsyncCNNGateway":
-        gw = cls(cfg, clock=clock, exec_cache=exec_cache, tracker=tracker)
+                  tracker=None, faults=None) -> "AsyncCNNGateway":
+        gw = cls(cfg, clock=clock, exec_cache=exec_cache, tracker=tracker,
+                 faults=faults)
         gw.register_plan(plan, plan_id=plan_id, params=params, key=key,
                          mesh=mesh)
         return gw
@@ -915,6 +917,12 @@ class AsyncCNNGateway(SlotPool):
                     return all(r.status != "pending" for r in alive)
 
                 try:
+                    # chaos seam: a scheduled worker crash raises here
+                    # and rides the failed-dispatch path below — the
+                    # requests fail, the fleet takes a health strike
+                    # and re-routes, exactly as for a real device loss
+                    self._fault_check("dispatch", plan_id=entry.plan_id,
+                                      n=len(alive))
                     out = await self._loop.run_in_executor(
                         self._executor,
                         lambda: np.asarray(
@@ -991,6 +999,10 @@ class AsyncCNNGateway(SlotPool):
         every terminal counter in a single pass — the heartbeat the
         fleet health checks and routers read (never racing dict
         reads)."""
+        # chaos seam: a stalled/crashed worker raises here, which
+        # ``FleetWorker.view`` reads as a missed heartbeat — the same
+        # path a hung process takes
+        self._fault_check("heartbeat")
         return super().snapshot(
             clock=self.clock, queue_depth=len(self.queue),
             served=self.served, rejected=self.rejected,

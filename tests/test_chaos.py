@@ -1,0 +1,478 @@
+"""``repro.chaos``: seeded fault plans (validation, serialization,
+seed-determinism), the ``FaultInjector``'s seam semantics (sticky
+crashes, stall windows, tracker disk-full), ``StoreRoot`` worker
+leases, restart-from-store recovery (``respawn_gateway`` with zero
+recompiles), and the live fleet kill→re-route→respawn path.  The
+full crash-mid-trace end-to-end over a shared store is marked
+``chaos`` (CI's chaos job)."""
+
+import asyncio
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.chaos import (FaultInjector, FaultPlan, FaultSpec,
+                         HeartbeatStalled, TrackerDiskFull, WorkerCrashed,
+                         corrupt_cache_entries, make_fault_plan,
+                         respawn_gateway)
+from repro.core import deploy
+from repro.core.cnn import (CNNConfig, ConvLayerSpec, cnn_forward_ref,
+                            fitted_block_models)
+from repro.fleet import Fleet, FleetError, FleetWorker, HealthPolicy
+from repro.ops import LeaseHeld, PlanNotFound, StoreRoot
+from repro.runtime import CompiledCNN
+from repro.serve import AsyncCNNGateway, AsyncServeConfig
+
+
+def _cfg():
+    return CNNConfig(layers=(
+        ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
+        ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
+    ), img_h=16, img_w=64)
+
+
+@pytest.fixture(scope="module")
+def compiled_plan():
+    """One plan + warmed CompiledCNN shared by every live test
+    (registering a pre-compiled plan into a gateway is free)."""
+    plan = deploy.plan_deployment(_cfg(), fitted_block_models(),
+                                  target=0.8, on_infeasible="fallback")
+    return plan, CompiledCNN.from_plan(plan, max_batch=4)
+
+
+def _gateway(compiled_plan, *, max_pending=16, faults=None):
+    plan, compiled = compiled_plan
+    gw = AsyncCNNGateway(AsyncServeConfig(max_batch=4,
+                                          max_pending=max_pending),
+                         faults=faults)
+    gw.register_plan(plan, plan_id="cnn", compiled=compiled)
+    return gw
+
+
+def _ref_outputs(compiled_plan, imgs):
+    plan, compiled = compiled_plan
+    pcfg = deploy.plan_config(plan)
+    return [np.asarray(cnn_forward_ref(compiled.params, jnp.asarray(i),
+                                       pcfg)) for i in imgs]
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultPlan: validation, serialization, seed-determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("explode", "w", at=1.0)
+    with pytest.raises(ValueError, match="non-empty"):
+        FaultSpec("crash_dispatch", "", at=1.0)
+    with pytest.raises(ValueError, match="exactly one"):
+        FaultSpec("crash_dispatch", "w")
+    with pytest.raises(ValueError, match="exactly one"):
+        FaultSpec("crash_dispatch", "w", at=1.0, after_n=1)
+    with pytest.raises(ValueError, match="must be ≥ 0"):
+        FaultSpec("crash_dispatch", "w", at=-1.0)
+    with pytest.raises(ValueError, match="must be ≥ 1"):
+        FaultSpec("crash_dispatch", "w", after_n=0)
+    # windows only apply where they mean something
+    with pytest.raises(ValueError, match="duration_s does not apply"):
+        FaultSpec("crash_dispatch", "w", at=1.0, duration_s=1.0)
+    with pytest.raises(ValueError, match="count does not apply"):
+        FaultSpec("crash_dispatch", "w", after_n=1, count=2)
+    with pytest.raises(ValueError, match="must be > 0"):
+        FaultSpec("stall_heartbeat", "w", at=1.0, duration_s=0.0)
+    with pytest.raises(ValueError, match="must be ≥ 1"):
+        FaultSpec("tracker_disk_full", "w", after_n=1, count=0)
+
+
+def test_fault_plan_round_trip_and_queries():
+    plan = FaultPlan((
+        FaultSpec("crash_dispatch", "a", at=3.5),
+        FaultSpec("stall_heartbeat", "b", at=1.0, duration_s=2.0),
+        FaultSpec("tracker_disk_full", "a", after_n=4, count=2),
+    ), seed=7)
+    again = FaultPlan.from_json(plan.to_json())
+    assert again == plan and again.seed == 7
+    assert len(plan) == 3 and tuple(plan) == plan.specs
+    assert [s.kind for s in plan.for_target("a")] \
+        == ["crash_dispatch", "tracker_disk_full"]
+    assert [s.target for s in plan.of_kind("stall_heartbeat")] == ["b"]
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        plan.of_kind("meteor_strike")
+    # the payload is plain JSON with no None noise
+    payload = plan.to_payload()
+    assert payload["schema_version"] == 1
+    assert "duration_s" not in payload["specs"][0]
+
+
+def test_fault_plan_rejects_foreign_payloads():
+    plan = FaultPlan((FaultSpec("crash_dispatch", "w", at=1.0),))
+    payload = plan.to_payload()
+    payload["schema_version"] = 999
+    with pytest.raises(ValueError, match="schema_version"):
+        FaultPlan.from_payload(payload)
+    with pytest.raises(ValueError, match="unknown FaultSpec fields"):
+        FaultSpec.from_payload({"kind": "crash_dispatch", "target": "w",
+                                "at": 1.0, "blast_radius": 3})
+
+
+def test_make_fault_plan_is_seed_deterministic():
+    kw = dict(workers=("a", "b", "c"), horizon_s=100.0,
+              kinds=("crash_dispatch", "stall_heartbeat",
+                     "tracker_disk_full"))
+    p1, p2 = make_fault_plan(7, **kw), make_fault_plan(7, **kw)
+    assert p1 == p2 and p1.to_json() == p2.to_json()
+    assert p1.seed == 7
+    assert make_fault_plan(8, **kw) != p1
+    # time-triggered faults land away from the trace edges
+    for spec in p1.of_kind("crash_dispatch", "stall_heartbeat"):
+        assert 0.2 * 100.0 <= spec.at <= 0.7 * 100.0
+        assert spec.target in kw["workers"]
+    with pytest.raises(ValueError, match="at least one worker"):
+        make_fault_plan(7, workers=(), horizon_s=1.0)
+    with pytest.raises(ValueError, match="horizon_s"):
+        make_fault_plan(7, workers=("a",), horizon_s=0.0)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        make_fault_plan(7, workers=("a",), horizon_s=1.0, kinds=("x",))
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: seam semantics
+# ---------------------------------------------------------------------------
+
+def test_crash_is_sticky_until_revive():
+    inj = FaultInjector(FaultPlan((
+        FaultSpec("crash_dispatch", "w", after_n=1),)))
+    seam = inj.for_target("w")
+    with pytest.raises(WorkerCrashed, match="crashed mid-dispatch"):
+        seam.check("dispatch", now=0.0)
+    assert inj.crashed == frozenset({"w"})
+    # a dead process is dead at EVERY seam, not just the one that fired
+    with pytest.raises(WorkerCrashed, match="is dead"):
+        seam.check("heartbeat", now=1.0)
+    inj.check("other", "dispatch", now=1.0)      # other targets unharmed
+    inj.revive("w")
+    assert inj.crashed == frozenset()
+    seam.check("dispatch", now=2.0)    # the fired spec stays consumed
+    assert [(k, t) for k, t, _ in inj.injected] \
+        == [("crash_dispatch", "w")]
+
+
+def test_stall_heartbeat_window():
+    inj = FaultInjector(FaultPlan((
+        FaultSpec("stall_heartbeat", "w", at=10.0, duration_s=5.0),)))
+    seam = inj.for_target("w")
+    seam.check("heartbeat", now=9.0)             # before the window
+    with pytest.raises(HeartbeatStalled):
+        seam.check("heartbeat", now=10.0)
+    with pytest.raises(HeartbeatStalled):
+        seam.check("heartbeat", now=14.9)
+    seam.check("heartbeat", now=15.0)            # window closed: recovers
+    seam.check("dispatch", now=12.0)             # wrong seam point: silent
+    assert [k for k, _, _ in inj.injected] == ["stall_heartbeat"] * 2
+
+
+def test_tracker_disk_full_window_and_passthrough():
+    inj = FaultInjector(FaultPlan((
+        FaultSpec("tracker_disk_full", "w", after_n=2, count=2),)))
+    assert inj.tracker_io_fault("other") is None  # pass-through when unplanned
+    io_fault = inj.tracker_io_fault("w")
+    io_fault({"event": "w1"})                    # write 1: fine
+    for _ in range(2):                           # writes 2-3: disk full
+        with pytest.raises(TrackerDiskFull, match="disk full"):
+            io_fault({"event": "doomed"})
+    io_fault({"event": "w4"})                    # window passed: recovers
+    assert [k for k, _, _ in inj.injected] == ["tracker_disk_full"] * 2
+
+
+def test_corrupt_cache_entries_sorted_and_limited(tmp_path):
+    for name in ("b.exe", "a.exe", "c.exe", "keep.other"):
+        (tmp_path / name).write_bytes(b"payload")
+    hit = corrupt_cache_entries(tmp_path, limit=2)
+    assert [p.name for p in hit] == ["a.exe", "b.exe"]  # deterministic order
+    assert (tmp_path / "a.exe").read_bytes() != b"payload"
+    assert (tmp_path / "c.exe").read_bytes() == b"payload"
+    assert (tmp_path / "keep.other").read_bytes() == b"payload"
+
+
+def test_gateway_dispatch_crash_rides_failed_dispatch_path(compiled_plan):
+    """The injected crash surfaces through the gateway's *production*
+    failed-dispatch path: the request future fails with WorkerCrashed,
+    the sticky corpse fails its heartbeat too, and a revive (the
+    restart) serves bit-exactly again."""
+    _, compiled = compiled_plan
+    imgs = compiled.sample_inputs(2)
+    inj = FaultInjector(FaultPlan((
+        FaultSpec("crash_dispatch", "w", after_n=1),)))
+
+    async def main():
+        gw = _gateway(compiled_plan, faults=inj.for_target("w"))
+        async with gw:
+            fut = await gw.submit(imgs[0])
+            with pytest.raises(WorkerCrashed):
+                await fut
+            assert gw.failed == 1
+            with pytest.raises(WorkerCrashed):   # missed heartbeat
+                gw.snapshot()
+            inj.revive("w")
+            return await gw.infer(imgs[1])
+
+    out = asyncio.run(main())
+    np.testing.assert_array_equal(out, _ref_outputs(compiled_plan, imgs)[1])
+    assert [k for k, _, _ in inj.injected] == ["crash_dispatch"]
+
+
+# ---------------------------------------------------------------------------
+# StoreRoot: shared layout + worker leases
+# ---------------------------------------------------------------------------
+
+def test_store_root_layout_and_lease_lifecycle(tmp_path, compiled_plan):
+    plan, _ = compiled_plan
+    root = StoreRoot(tmp_path / "state")
+    root.plans.save(plan, "cnn")
+    assert root.plans.list_plans() == ["cnn"]
+    assert root.exec_cache_dir.is_dir()
+    lease = root.acquire_lease("w0")
+    assert lease.held and root.list_leases() == ["w0"]
+    data = json.loads((root.root / "leases" / "w0").read_text())
+    assert data["pid"] == os.getpid() and data["worker_id"] == "w0"
+    lease.release()
+    lease.release()                              # idempotent
+    assert not lease.held and root.list_leases() == []
+    # lease ids obey the same portable-filename rules as plan ids
+    with pytest.raises(ValueError, match="plan_id"):
+        root.acquire_lease("../escape")
+
+
+def test_lease_takeover_and_stale_release(tmp_path):
+    root = StoreRoot(tmp_path / "state")
+    old = root.acquire_lease("w")
+    new = root.acquire_lease("w")        # own-pid takeover (respawn path)
+    assert root.list_leases() == ["w"]
+    # releasing the stale pre-takeover handle must NOT evict the
+    # successor: the unlink is token-checked
+    old.release()
+    assert root.list_leases() == ["w"]
+    new.release()
+    assert root.list_leases() == []
+    # a dead holder's lease is taken over atomically (crash recovery
+    # never requires manual lock removal); pid 2**30 exceeds pid_max
+    path = root.root / "leases" / "w"
+    path.write_text(json.dumps({"worker_id": "w", "pid": 2 ** 30,
+                                "acquired_at": 0.0}))
+    with root.acquire_lease("w"):
+        assert json.loads(path.read_text())["pid"] == os.getpid()
+    assert root.list_leases() == []              # context manager released
+
+
+def test_lease_held_by_live_foreign_process(tmp_path):
+    root = StoreRoot(tmp_path / "state")
+    path = root.root / "leases" / "w"
+    # forge a lease held by a live process that is not us (our parent)
+    path.write_text(json.dumps({"worker_id": "w", "pid": os.getppid(),
+                                "acquired_at": 1.0}))
+    with pytest.raises(LeaseHeld, match="live pid"):
+        root.acquire_lease("w")
+    assert root.list_leases() == ["w"]           # the holder keeps it
+
+
+# ---------------------------------------------------------------------------
+# respawn_gateway: restart-from-store (the zero-recompile headline)
+# ---------------------------------------------------------------------------
+
+def test_respawn_gateway_warm_from_store_zero_recompiles(tmp_path,
+                                                         compiled_plan):
+    plan, compiled = compiled_plan
+    root = StoreRoot(tmp_path / "state")
+    root.plans.save(plan, "cnn")
+    # the dead predecessor already paid the compile storm into the
+    # shared cache (same max_batch → same bucket keys)
+    pre = root.exec_cache()
+    CompiledCNN.from_plan(plan, max_batch=4, exec_cache=pre)
+    assert pre.stats()["disk_stores"] > 0
+
+    gw = respawn_gateway(root, "w1", ["cnn"],
+                         AsyncServeConfig(max_batch=4))
+    s = gw.exec_cache.stats()
+    assert s["compiles"] == 0                    # the acceptance headline
+    assert s["disk_hits"] > 0
+    assert sorted(gw.plans) == ["cnn"]
+    assert gw.lease.held and root.list_leases() == ["w1"]
+
+    imgs = compiled.sample_inputs(1)
+
+    async def main():
+        async with gw:
+            return await gw.infer(imgs[0])
+
+    out = asyncio.run(main())
+    np.testing.assert_array_equal(out, _ref_outputs(compiled_plan, imgs)[0])
+    gw.lease.release()
+
+    # a missing plan fails loudly AND releases the lease it took — a
+    # half-respawned identity must not stay claimed
+    with pytest.raises(PlanNotFound):
+        respawn_gateway(root, "w1", ["ghost"])
+    assert root.list_leases() == []
+
+
+# ---------------------------------------------------------------------------
+# Fleet.kill / Fleet.respawn, live (tier-1 scale)
+# ---------------------------------------------------------------------------
+
+def test_fleet_kill_reroutes_and_respawn_readmits(compiled_plan):
+    """The live kill invariant: a killed worker's queued requests are
+    re-routed on their original budget and all complete bit-exactly;
+    respawn re-admits the identity through the health-probe path."""
+    _, compiled = compiled_plan
+    imgs = compiled.sample_inputs(10)
+
+    async def main():
+        workers = [
+            FleetWorker("a", _gateway(compiled_plan), "v5e",
+                        health=HealthPolicy(eject_after=1,
+                                            probe_interval=0.05)),
+            FleetWorker("b", _gateway(compiled_plan), "v5e"),
+        ]
+        fleet = Fleet(workers, router="round_robin")
+        async with fleet:
+            futs = [fleet.submit_nowait(img) for img in imgs]
+            killed = fleet.kill("a")
+            assert killed.dead
+            assert fleet.kill("a") is killed     # idempotent
+            with pytest.raises(FleetError, match="unknown worker"):
+                fleet.kill("zz")
+            with pytest.raises(FleetError, match="not dead"):
+                await fleet.respawn("b")
+            with pytest.raises(FleetError, match="no spawn factory"):
+                await fleet.respawn("a")
+            outs = await asyncio.gather(*futs)   # zero lost
+            await fleet.respawn("a", gateway=_gateway(compiled_plan))
+            # probe is immediately due: the next requests routed to the
+            # respawned worker are canaries that re-admit it
+            canary = [await fleet.infer(img) for img in imgs[:2]]
+            assert workers[0].health.healthy
+            return outs, canary, fleet.stats()
+
+    outs, canary, stats = asyncio.run(main())
+    refs = _ref_outputs(compiled_plan, imgs)
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(out, ref)
+    np.testing.assert_array_equal(canary[0], refs[0])
+    assert stats["kills"] == 1 and stats["respawns"] == 1
+    assert stats["rerouted"] > 0                 # the queue moved over
+    assert stats["served"] == len(imgs) + 2
+    assert not stats["workers"]["a"]["dead"]
+
+
+# ---------------------------------------------------------------------------
+# the full crash-mid-trace end-to-end over a shared store — CI chaos job
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_chaos_end_to_end_crash_kill_respawn_shared_store(tmp_path,
+                                                          compiled_plan):
+    """Seeded crash mid-dispatch → the fleet kills the worker and
+    re-routes every queued + mid-dispatch request → respawn rebuilds
+    the gateway from the shared StoreRoot (lease takeover, plans from
+    the store, zero recompiles) → the probe path re-admits it.
+    ``completed + refused == trace`` and ``lost == 0`` throughout."""
+    plan, compiled = compiled_plan
+    root = StoreRoot(tmp_path / "state")
+    root.plans.save(plan, "cnn")
+    pre = root.exec_cache()                      # predecessor's compiles
+    CompiledCNN.from_plan(plan, max_batch=4, exec_cache=pre)
+
+    inj = FaultInjector(FaultPlan((
+        FaultSpec("crash_dispatch", "a", after_n=1),), seed=42))
+
+    def _cfg_async():
+        return AsyncServeConfig(max_batch=4, max_pending=32)
+
+    def spawn_a():
+        inj.revive("a")                          # the restart
+        return respawn_gateway(root, "a", ["cnn"], _cfg_async())
+
+    gw_a = respawn_gateway(root, "a", ["cnn"], _cfg_async(),
+                           faults=inj.for_target("a"))
+    gw_b = respawn_gateway(root, "b", ["cnn"], _cfg_async())
+    assert root.list_leases() == ["a", "b"]
+    imgs = compiled.sample_inputs(24)
+
+    async def main():
+        workers = [
+            FleetWorker("a", gw_a, "v5e", spawn=spawn_a,
+                        health=HealthPolicy(eject_after=1,
+                                            probe_interval=0.05)),
+            FleetWorker("b", gw_b, "v5e"),
+        ]
+        fleet = Fleet(workers, router="round_robin")
+        async with fleet:
+            futs, refused = [], 0
+            for i, img in enumerate(imgs):
+                try:
+                    futs.append(fleet.submit_nowait(img))
+                except FleetError:
+                    refused += 1
+                if i % 4 == 3:                   # let dispatches (and
+                    await asyncio.sleep(0.01)    # the crash) happen
+            outs = await asyncio.gather(*futs)
+            assert fleet.workers["a"].dead       # the crash became a kill
+            respawned = await fleet.respawn("a")  # via the spawn factory
+            canary = [await fleet.infer(img) for img in imgs[:2]]
+            assert respawned.health.healthy      # probe re-admitted it
+            return (outs, refused, canary, fleet.stats(),
+                    respawned.gateway.exec_cache.stats())
+
+    outs, refused, canary, stats, respawn_cache = asyncio.run(main())
+    # nothing lost: every admitted request completed, bit-exactly
+    assert len(outs) + refused == len(imgs)
+    refs = _ref_outputs(compiled_plan, imgs)
+    for out, ref in zip(outs, refs[:len(outs)]):
+        np.testing.assert_array_equal(out, ref)
+    np.testing.assert_array_equal(canary[0], refs[0])
+    assert stats["kills"] == 1 and stats["respawns"] == 1
+    assert stats["rerouted"] > 0                 # victims were re-routed
+    assert stats["served"] == len(outs) + 2
+    # the injected schedule actually happened, exactly once
+    assert [(k, t) for k, t, _ in inj.injected] == [("crash_dispatch", "a")]
+    assert inj.crashed == frozenset()
+    # restart-from-store: the respawned gateway deserialized everything
+    # its dead predecessor had compiled — zero recompiles
+    assert not stats["workers"]["a"]["dead"]
+    assert respawn_cache["compiles"] == 0
+    assert respawn_cache["disk_hits"] > 0
+    assert root.list_leases() == ["a", "b"]      # identity re-claimed
+
+
+@pytest.mark.chaos
+def test_chaos_respawned_gateway_is_warm(tmp_path, compiled_plan):
+    """The respawn factory's gateway — built while the dead
+    predecessor's lease is still on disk — compiles nothing."""
+    plan, compiled = compiled_plan
+    root = StoreRoot(tmp_path / "state")
+    root.plans.save(plan, "cnn")
+    dead = respawn_gateway(root, "a", ["cnn"],
+                           AsyncServeConfig(max_batch=4))
+    # first spawn on a cold store pays the compiles...
+    assert dead.exec_cache.stats()["compiles"] > 0
+    # ...the respawn (same process takeover, lease still on disk)
+    # deserializes them all
+    reborn = respawn_gateway(root, "a", ["cnn"],
+                             AsyncServeConfig(max_batch=4))
+    s = reborn.exec_cache.stats()
+    assert s["compiles"] == 0 and s["disk_hits"] > 0
+    assert reborn.lease.held
+    dead.lease.release()                         # stale: token-checked
+    assert root.list_leases() == ["a"]
+
+    imgs = compiled.sample_inputs(1)
+
+    async def main():
+        async with reborn:
+            return await reborn.infer(imgs[0])
+
+    out = asyncio.run(main())
+    np.testing.assert_array_equal(out, _ref_outputs(compiled_plan, imgs)[0])

@@ -120,6 +120,73 @@ def test_drain_after_trace_end_is_a_noop_drain():
     assert r.per_worker["w1-v5e"]["drained"]
 
 
+def test_kill_respawn_regression_zero_lost():
+    """The crash-recovery invariant the recovery benchmark pins: a kill
+    voids the worker's in-flight batch (the process died mid-dispatch,
+    unlike a drain), re-routes it and the queue on original deadlines,
+    and a warm respawn brings the worker back — nothing is lost."""
+    trace = make_trace(20_000, _rate(), seed=42)
+    horizon = float(trace.arrivals[-1])
+    r = simulate(SPECS, trace, "plan_aware",
+                 kill_at=0.4 * horizon, kill_worker="w2-v5p",
+                 respawn_at=0.6 * horizon)
+    assert r.completed == len(trace) and r.lost == 0
+    assert r.kill_rerouted > 0               # queue/in-flight re-routed
+    assert r.rerouted >= r.kill_rerouted
+    assert r.killed_worker == "w2-v5p"
+    assert r.respawn_at_s == pytest.approx(0.6 * horizon)
+    w = r.per_worker["w2-v5p"]
+    assert w["killed"] and w["respawned"] and not w["drained"]
+    # without the respawn the survivors still lose nothing, but the
+    # dead worker serves strictly less — i.e. the respawn demonstrably
+    # returned it to rotation
+    r_dead = simulate(SPECS, trace, "plan_aware",
+                      kill_at=0.4 * horizon, kill_worker="w2-v5p")
+    assert r_dead.completed == len(trace) and r_dead.lost == 0
+    assert r_dead.per_worker["w2-v5p"]["killed"]
+    assert not r_dead.per_worker["w2-v5p"]["respawned"]
+    assert w["served"] > r_dead.per_worker["w2-v5p"]["served"]
+
+
+def test_kill_is_bit_reproducible_and_additive():
+    """Same trace + same kill schedule → byte-identical payloads; and a
+    run with no kill reports the additive fields as inert defaults (the
+    committed BENCH_fleet contract)."""
+    trace = make_trace(5000, _rate(), seed=42)
+    horizon = float(trace.arrivals[-1])
+    kw = dict(kill_at=0.4 * horizon, kill_worker="w1-v5e",
+              respawn_at=0.5 * horizon)
+    a = simulate(SPECS, trace, "plan_aware", **kw)
+    b = simulate(SPECS, trace, "plan_aware", **kw)
+    assert json.dumps(a.to_payload()) == json.dumps(b.to_payload())
+    plain = simulate(SPECS, trace, "plan_aware")
+    assert plain.kill_rerouted == 0
+    assert plain.killed_worker is None and plain.respawn_at_s is None
+    assert not any(w["killed"] or w["respawned"]
+                   for w in plain.per_worker.values())
+
+
+def test_kill_validation():
+    trace = make_trace(10, _rate())
+    with pytest.raises(ValueError, match="go together"):
+        simulate(SPECS, trace, kill_at=1.0)
+    with pytest.raises(ValueError, match="requires"):
+        simulate(SPECS, trace, respawn_at=1.0)
+    with pytest.raises(ValueError, match="kill_at"):
+        simulate(SPECS, trace, kill_at=2.0, kill_worker="w1-v5e",
+                 respawn_at=1.0)
+    with pytest.raises(ValueError, match="unknown kill_worker"):
+        simulate(SPECS, trace, kill_at=1.0, kill_worker="nope")
+
+
+def test_kill_after_trace_end_reroutes_nothing():
+    trace = make_trace(500, _rate(), seed=1)
+    r = simulate(SPECS, trace, "plan_aware",
+                 kill_at=1e9, kill_worker="w1-v5e")
+    assert r.completed == len(trace) and r.kill_rerouted == 0
+    assert r.per_worker["w1-v5e"]["killed"]
+
+
 def test_mixed_plan_trace_respects_workload_hosting():
     """A 70/30 CNN/MoE traffic mix over a fleet where only the fast
     tiers host the MoE plan (it is infeasible on edge — see

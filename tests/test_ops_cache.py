@@ -145,6 +145,40 @@ def test_fingerprint_mismatch_falls_back_to_compile(tmp_path, plan):
     assert s["compiles"] > 0           # silent fallback to live compile
 
 
+def test_fingerprint_drift_at_same_path_is_quarantined_not_loaded(
+        tmp_path, plan):
+    """Env-fingerprint drift under an *unchanged* entry path (a cache
+    dir carried across builds whose key scheme coincided): the embedded
+    fingerprint is the authority — the entry is quarantined as
+    ``*.stale`` and recompiled; its payload is never deserialized (it
+    is poisoned here, so any attempt would raise)."""
+    cold = PersistentExecutableCache(tmp_path)
+    CompiledCNN.from_plan(plan, _cfg(), max_batch=1, exec_cache=cold)
+    entries = sorted(tmp_path.glob("*.exe"))
+    assert entries
+    for p in entries:
+        entry = pickle.loads(p.read_bytes())
+        entry["fingerprint"] = ("drifted-jax", "drifted-backend")
+        entry["payload"] = b"not a serialized executable"
+        p.write_bytes(pickle.dumps(entry))
+
+    events = []
+    warm = PersistentExecutableCache(tmp_path)
+    warm.on_event = lambda ev, fields: events.append(ev)
+    model = CompiledCNN.from_plan(plan, _cfg(), max_batch=1,
+                                  exec_cache=warm)
+    s = warm.stats()
+    assert model.compiles > 0 and s["disk_hits"] == 0
+    assert s["disk_stale"] == len(entries)
+    assert "cache_disk_stale" in events
+    stale = sorted(tmp_path.glob("*.stale"))
+    assert len(stale) == len(entries)      # moved aside, not deleted
+    assert pickle.loads(stale[0].read_bytes())["fingerprint"] \
+        == ("drifted-jax", "drifted-backend")
+    # the fallback compiles re-stored fresh entries at the live paths
+    assert s["disk_stores"] == model.compiles
+
+
 def test_corrupt_entry_quarantined_and_recompiled(tmp_path, plan):
     cold = PersistentExecutableCache(tmp_path)
     CompiledCNN.from_plan(plan, _cfg(), max_batch=1, exec_cache=cold)

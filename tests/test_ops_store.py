@@ -3,24 +3,28 @@ retire/revive lifecycle, corrupt-file quarantine, id validation, and a
 property test over concurrent save/load/retire interleavings."""
 
 import json
+import os
 import threading
 
 import pytest
 
 from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
 
-from repro.core import deploy
+from repro.chaos import tear_plan_write
+from repro.core import allocate, deploy
 from repro.core.cnn import CNNConfig, ConvLayerSpec, fitted_block_models
 from repro.ops import (PlanCorrupt, PlanNotFound, PlanRetired, PlanStore,
                        PlanStoreError)
 
 
-def _plan():
+def _plan(device=None):
     cfg = CNNConfig(layers=(
         ConvLayerSpec(1, 4, data_bits=8, coeff_bits=6, block="conv4"),
         ConvLayerSpec(4, 3, data_bits=6, coeff_bits=4, block="conv3"),
     ), img_h=16, img_w=64)
-    return deploy.plan_deployment(cfg, fitted_block_models(), target=0.8,
+    args = ((cfg, fitted_block_models()) if device is None else
+            (cfg, fitted_block_models(), allocate.get_device(device)))
+    return deploy.plan_deployment(*args, target=0.8,
                                   on_infeasible="fallback")
 
 
@@ -154,6 +158,63 @@ def test_invalid_plan_ids_rejected(tmp_path, plan, bad_id):
 def test_save_requires_a_plan(tmp_path):
     with pytest.raises(PlanStoreError, match="DeploymentPlan"):
         PlanStore(tmp_path).save({"not": "a plan"}, "p")
+
+
+# ---------------------------------------------------------------------------
+# crash mid-write: a torn temp file never corrupts a read
+# ---------------------------------------------------------------------------
+
+def test_torn_tmp_at_every_byte_offset_never_corrupts_reads(tmp_path, plan):
+    """A crash at ANY byte offset of ``atomic_write_text``'s temp file —
+    before the rename — leaves the store serving the complete old plan:
+    the torn temp never shadows the artifact, never appears in
+    listings, and the interrupted save simply retries."""
+    store = PlanStore(tmp_path)
+    store.save(plan, "p")
+    new_plan = _plan("v5p")
+    assert new_plan.device.name != plan.device.name
+    text = new_plan.to_json()
+    for cut in range(len(text.encode("utf-8")) + 1):
+        tmp = tear_plan_write(store, "p", text, cut=cut)
+        assert store.list_plans() == ["p"]       # torn temp not listed
+        got = store.load("p")                    # never PlanCorrupt
+        assert got.device.name == plan.device.name
+        tmp.unlink()
+    # the retried save completes and flips the artifact atomically
+    store.save(new_plan, "p")
+    assert store.load("p").device.name == new_plan.device.name
+
+
+if HAVE_HYPOTHESIS:
+    _cut_strategy = st.floats(min_value=0.0, max_value=1.0)
+else:                                           # pragma: no cover
+    _cut_strategy = None
+
+
+@settings(max_examples=50, deadline=None)
+@given(frac=_cut_strategy)
+def test_property_crash_mid_save_yields_old_or_new(tmp_path_factory, plan,
+                                                   frac):
+    """Property over the crash point: load-after-crash yields either the
+    complete old plan (crash before the rename, at any truncation) or
+    the complete new one (crash after — the rename is the commit point)
+    — never a corrupt read."""
+    root = tmp_path_factory.mktemp("torn")
+    store = PlanStore(root)
+    store.save(plan, "p")
+    new_plan = _plan("v5p")
+    text = new_plan.to_json()
+    data = text.encode("utf-8")
+    cut = int(round(frac * len(data)))
+    tmp = tear_plan_write(store, "p", text, cut=cut)
+    assert store.load("p").device.name == plan.device.name
+    if cut == len(data):
+        # the write had finished: the rename commits the new plan
+        os.replace(tmp, store.path_for("p"))
+        assert store.load("p").device.name == new_plan.device.name
+    else:
+        tmp.unlink()
+        assert store.load("p").device.name == plan.device.name
 
 
 # ---------------------------------------------------------------------------

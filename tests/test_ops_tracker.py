@@ -9,7 +9,7 @@ import time
 import pytest
 
 from repro.ops import (JsonlTracker, NullTracker, StatsSampler, Tracker,
-                       read_events)
+                       read_events, read_log)
 
 
 def test_events_written_with_t_and_event(tmp_path):
@@ -102,6 +102,80 @@ def test_null_tracker_accepts_everything():
     tr.log_metrics("src", {"b": 2})
     tr.close()
     assert isinstance(tr, Tracker)
+
+
+# ---------------------------------------------------------------------------
+# read_log: the seal's loss accounting, surfaced (regression)
+# ---------------------------------------------------------------------------
+
+def test_read_log_surfaces_seal_drop_count(tmp_path):
+    """Regression: ``read_events`` returned the events but swallowed the
+    seal's loss accounting — recovery harnesses could not bound
+    telemetry loss without re-parsing the seal by hand.  ``read_log``
+    exposes recorded/dropped/write_errors from the seal record."""
+    tr = JsonlTracker(tmp_path / "m.jsonl", max_queue=8,
+                      flush_interval_s=30)
+    gate = threading.Event()
+    tr._write = lambda entry, _w=tr._write: (gate.wait(5), _w(entry))[1]
+    for i in range(100):
+        tr.log_event("burst", i=i)
+    gate.set()
+    tr.close()
+    log = read_log(tr.path)
+    assert log.sealed
+    assert log.dropped == tr.dropped > 0
+    assert log.recorded == tr.recorded
+    assert log.write_errors == 0
+    assert log.recorded + log.dropped == 100
+    assert len(log.events) == log.recorded + 1      # + the seal itself
+    # read_events stays the thin view over the same parse
+    assert list(log.events) == read_events(tr.path)
+
+
+def test_read_log_unsealed_and_torn_lines(tmp_path):
+    # a tracker that died mid-flight left no seal: no loss bound exists
+    path = tmp_path / "died.jsonl"
+    path.write_text('{"event": "a", "t": 1.0}\n'
+                    '{"event": "b", "t": 2.0}\n'
+                    '{"event": "torn-by-cra')       # crash mid-write
+    log = read_log(path)
+    assert not log.sealed
+    assert log.recorded is None and log.dropped is None
+    assert log.torn_lines == 1
+    assert [e["event"] for e in log.events] == ["a", "b"]
+    # a torn append AFTER a clean close does not unseal the file — the
+    # seal record is intact and its totals still hold
+    tr = JsonlTracker(tmp_path / "closed.jsonl")
+    tr.log_event("whole")
+    tr.close()
+    with open(tr.path, "a", encoding="utf-8") as fh:
+        fh.write('{"event": "torn-by-cra')
+    log = read_log(tr.path)
+    assert log.sealed and log.recorded == 1 and log.torn_lines == 1
+
+
+def test_io_fault_counts_write_errors_never_raises(tmp_path):
+    """The ``io_fault=`` seam (``repro.chaos``'s tracker_disk_full):
+    failed disk writes are counted, never raised to the caller, and the
+    seal reports them so recovery tests can bound telemetry loss."""
+    def io_fault(entry):
+        if entry.get("event") == "doomed":
+            raise OSError("disk full (injected)")
+
+    tr = JsonlTracker(tmp_path / "m.jsonl", io_fault=io_fault)
+    tr.log_event("ok-1")
+    tr.log_event("doomed")
+    tr.log_event("ok-2")
+    tr.close()
+    assert tr.write_errors == 1
+    log = read_log(tr.path)
+    assert [e["event"] for e in log.events] \
+        == ["ok-1", "ok-2", "tracker_closed"]
+    assert log.sealed and log.write_errors == 1
+    # the seal's books balance: every enqueued entry is either on disk
+    # or counted as a failed write
+    assert log.recorded == 3 and log.dropped == 0
+    assert len(log.events) - 1 == log.recorded - log.write_errors
 
 
 # ---------------------------------------------------------------------------
